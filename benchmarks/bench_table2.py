@@ -1,0 +1,123 @@
+"""Table 2 reproduction (§6): relative performance of every heuristic vs the
+best result per instance, over randomized linear networks.
+
+Protocol (scaled-down counts, same distributions): m=10 processors,
+homogeneous (100 MFLOPS) or heterogeneous (10-100 MFLOPS) powers, link speeds
+10-100 Mb/s with anti-correlated 0.1-1 ms latencies, 50 loads of 6-60 GFLOP
+(x66 for the "large tasks" row), communication-to-computation ratio in
+{0.01 .. 100} bytes/FLOP.
+
+Heuristics: SIMPLE, SINGLELOAD 100, SINGLEINST, MULTIINST 100, MULTIINST 300,
+HEURISTIC B, LP 1/2/3/6 (our linear program).  Statistic: makespan divided by
+the per-instance best, as in the paper's Table 2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.heuristics import heuristic_b, multi_inst, simple, single_inst, single_load
+from repro.core.instance import Chain, Instance, Loads, random_instance
+from repro.core.solver import solve
+
+from .common import banner, rel_stats, write_csv
+
+CCRS_FULL = [0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0]
+CCRS_QUICK = [0.01, 0.1, 1.0, 10.0, 100.0]
+
+
+def _scaled(inst: Instance, scale: float) -> Instance:
+    if scale == 1.0:
+        return inst
+    return Instance(
+        inst.chain,
+        Loads(v_comm=inst.loads.v_comm * scale, v_comp=inst.loads.v_comp * scale),
+        q=1,
+    )
+
+
+def _methods(quick: bool):
+    ms = {
+        "SIMPLE": lambda i: simple(i).makespan,
+        "SINGLELOAD_100": lambda i: single_load(i).makespan,
+        "SINGLEINST": lambda i: single_inst(i).makespan,
+        "MULTIINST_100": lambda i: multi_inst(i, cap=100).makespan,
+        "HEURISTIC_B": lambda i: heuristic_b(i).makespan,
+        "LP_1": lambda i: solve(i.with_q(1)).makespan,
+        "LP_2": lambda i: solve(i.with_q(2)).makespan,
+    }
+    if not quick:
+        ms["MULTIINST_300"] = lambda i: multi_inst(i, cap=300).makespan
+        ms["LP_3"] = lambda i: solve(i.with_q(3)).makespan
+        ms["LP_6"] = lambda i: solve(i.with_q(6)).makespan
+    return ms
+
+
+def main(quick: bool = False) -> dict:
+    banner("bench_table2 (§6, Table 2)")
+    rng = np.random.default_rng(0)
+    ccrs = CCRS_QUICK if quick else CCRS_FULL
+    n_inst = 2 if quick else 4
+    n_loads = 10 if quick else 50
+    methods = _methods(quick)
+    vals = {k: [] for k in methods}
+    rows = []
+    n_total = 0
+    for het in (False, True):
+        for size_scale in (1.0, 66.0):
+            for ccr in ccrs:
+                for k in range(n_inst):
+                    inst = _scaled(
+                        random_instance(rng, m=10, n_loads=n_loads, heterogeneous=het,
+                                        comm_to_comp=ccr, with_latency=True),
+                        size_scale,
+                    )
+                    got = {name: fn(inst) for name, fn in methods.items()}
+                    best = min(got.values())
+                    n_total += 1
+                    for name, v in got.items():
+                        rel = v / best if np.isfinite(v) else np.inf
+                        vals[name].append(rel)
+                        rows.append([het, size_scale, ccr, k, name, v, rel])
+    write_csv("table2_raw.csv", rows,
+              ["heterogeneous", "size_scale", "ccr", "rep", "heuristic",
+               "makespan", "relative"])
+
+    summary_rows = []
+    print(f"  {n_total} instances; relative-to-best statistics:")
+    print(f"  {'heuristic':<16} {'avg':>12} {'std':>12} {'max':>12} {'fail%':>7}")
+    stats = {}
+    for name in methods:
+        arr = np.array(vals[name])
+        fin = arr[np.isfinite(arr)]
+        fail = 100.0 * (1 - len(fin) / len(arr))
+        avg, std, mx = rel_stats(fin) if len(fin) else (np.inf,) * 3
+        stats[name] = (avg, std, mx, fail)
+        summary_rows.append([name, avg, std, mx, fail])
+        print(f"  {name:<16} {avg:>12.5f} {std:>12.2e} {mx:>12.5f} {fail:>6.1f}%")
+    write_csv("table2_summary.csv", summary_rows,
+              ["heuristic", "avg_relative", "std", "max_relative", "fail_pct"])
+
+    lp_names = [n for n in methods if n.startswith("LP_")]
+    best_lp = f"LP_{max(int(n.split('_')[1]) for n in lp_names)}"
+    # quick mode uses 10-load instances where the pipeline-fill fraction (and
+    # hence the multi-installment gain LP_1 forgoes) is ~5x larger than in the
+    # paper's 50-load protocol — thresholds widen accordingly
+    lp_tol, si_tol = (1.02, 1.20) if quick else (1.005, 1.10)
+    claims = {
+        # paper: LP n always <= 0.5% from the best (50-load protocol)
+        "lp_near_best": all(stats[n][0] < lp_tol for n in lp_names),
+        # paper: highest-Q LP is (essentially) always the best
+        "best_lp_avg_1.0": stats[best_lp][0] < 1.0005,
+        # paper: SIMPLE catastrophic on some instances
+        "simple_max_over_2x": stats["SIMPLE"][2] > 2.0,
+        # paper: SINGLEINST within ~6% of optimal on average (where it exists)
+        "singleinst_close": stats["SINGLEINST"][0] < si_tol,
+    }
+    for k, v in claims.items():
+        print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'}")
+    return claims
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""§Perf hillclimb driver: run one (arch × shape) cell under named
+ShardingPolicy variants, re-lower, re-analyse, and print the roofline-term
+deltas vs the paper-faithful baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell llama3.2-3b:prefill_32k \\
+      --variants baseline,last_logit,bf16_logits
+
+Each variant's full record is saved to bench_out/dryrun/ with a tag so the
+iterations are reproducible; the EXPERIMENTS.md §Perf log cites these tags.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+from repro.config import ShardingPolicy
+
+# named policy variants (the §Perf candidate changes); per-cell sets below
+VARIANTS = {
+    "baseline": {},
+    # --- serving ---
+    "last_logit": {"prefill_last_logit_only": True},
+    "bf16_logits": {"logits_fp32": False},
+    "last+bf16": {"prefill_last_logit_only": True, "logits_fp32": False},
+    "noseqshard": {"shard_seq_attn": False, "qkv_feature_shard": False},
+    "int8kv": {"kv_cache_dtype": "int8"},
+    "sp": {"sp_activations": True},
+    "sp+last": {"sp_activations": True, "prefill_last_logit_only": True},
+    "sp+last+bf16": {"sp_activations": True, "prefill_last_logit_only": True,
+                     "logits_fp32": False},
+    "sp+noremat": {"sp_activations": True, "remat": "none"},
+    "sp_noq": {"sp_activations": True, "qkv_feature_shard": False},
+    "sp_noq_noremat": {"sp_activations": True, "qkv_feature_shard": False,
+                       "remat": "none"},
+    "sp_noq+last": {"sp_activations": True, "qkv_feature_shard": False,
+                    "prefill_last_logit_only": True},
+    "chunk4k": {"attn_chunk": 4096},
+    "chunk2k": {"attn_chunk": 2048},
+    "blockskip": {"attn_block_skip": True},
+    "blockskip4k": {"attn_block_skip": True, "attn_chunk": 4096},
+    # --- training ---
+    "noremat": {"remat": "none"},
+    "nofsdp": {"fsdp_params": False},
+    "noremat+bf16": {"remat": "none", "logits_fp32": False},
+    "noremat+sp": {"remat": "none", "sp_activations": True,
+                   "qkv_feature_shard": False},
+    "expert_model": {"expert_axis": "model", "expert_ff_axis": "data"},
+    "microbatch4": {},  # handled via tcfg below
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+
+    from repro.config import TrainConfig
+    from repro.launch.dryrun import run_cell
+
+    rows = []
+    for name in args.variants.split(","):
+        over = VARIANTS[name]
+        policy = dataclasses.replace(ShardingPolicy(scan_layers=False), **over)
+        tcfg = TrainConfig(microbatches=4) if name == "microbatch4" else TrainConfig()
+        rec = run_cell(arch, shape, args.mesh == "multi", policy=policy, tcfg=tcfg,
+                       verbose=False)
+        fn = f"bench_out/dryrun/{arch}_{shape}_{args.mesh}_hc-{name}.json"
+        os.makedirs(os.path.dirname(fn), exist_ok=True)
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] != "ok":
+            print(f"{name:<14} FAILED: {rec.get('error')}")
+            continue
+        rl = rec["roofline"]
+        rows.append((name, rl["compute_s"], rl["memory_s"], rl["collective_s"],
+                     rec["collective_wire_bytes"], rec["memory"]["output_size_in_bytes"],
+                     rec["compile_s"]))
+    if not rows:
+        return
+    base = rows[0]
+    print(f"\n{args.cell} ({args.mesh}-pod)  [t in seconds; Δ vs {rows[0][0]}]")
+    print(f"{'variant':<14} {'compute':>10} {'mem(xla)':>10} {'collective':>11} "
+          f"{'out_bytes':>11} {'compile':>8}")
+    for name, c, m, coll, wire, outb, comp in rows:
+        print(f"{name:<14} {c:>10.4f} {m:>10.3f} {coll:>11.4f} {outb:>11.3e} {comp:>7.0f}s"
+              f"   Δc={100*(c/base[1]-1):+6.1f}% Δm={100*(m/base[2]-1):+6.1f}% "
+              f"Δcoll={100*(coll/base[3]-1):+6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

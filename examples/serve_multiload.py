@@ -1,0 +1,76 @@
+"""Multi-load serving: N inference request batches are the paper's N divisible
+loads.  The LP plans how many requests of each batch each chain stage serves
+and in how many installments; we compare its (simulated) makespan against the
+load-by-load heuristics on the same chain, then actually serve the planned
+requests with the real decode loop (CPU smoke model).
+
+Run:  PYTHONPATH=src python examples/serve_multiload.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ShardingPolicy, get_arch, smoke_variant
+from repro.core.heuristics import multi_inst, simple, single_inst
+from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
+from repro.data import make_batch
+from repro.models import decode_flops_per_token, init_params, prefill
+from repro.runtime import make_serve_step
+
+N_BATCHES = 3       # the N loads
+BATCH = 6           # requests per batch
+PROMPT, GEN = 16, 8
+
+cfg = smoke_variant(get_arch("llama3.2-3b"))
+policy = ShardingPolicy(attn_chunk=16)
+
+# --- the chain: 4 heterogeneous stages, scaled so one batch ~ 60ms/stage ---
+fl = decode_flops_per_token(cfg, PROMPT) * GEN
+speed = fl * BATCH / 0.06
+stages = [StageSpec(f"pod{i}", speed / (1 + 0.5 * i)) for i in range(4)]
+links = [LinkSpec(bytes_per_sec=4.0 * PROMPT * BATCH / 0.02, startup_sec=1e-4)] * 3
+planner = Planner(stages, links)
+loads = [BatchSpec(num_samples=BATCH, bytes_per_sample=4.0 * PROMPT,
+                   flops_per_sample=fl) for _ in range(N_BATCHES)]
+
+print(f"=== scheduling {N_BATCHES} request batches x {BATCH} requests on a "
+      f"4-stage chain ===")
+plan = planner.plan(loads, q=2)
+inst = planner.to_instance(loads, q=2)
+print(f"LP plan makespan: {plan.makespan * 1e3:.2f} ms")
+for name, fn in [("SIMPLE", simple), ("SINGLEINST", single_inst),
+                 ("MULTIINST", lambda i: multi_inst(i, cap=100))]:
+    r = fn(planner.to_instance(loads, q=1))
+    rel = r.makespan / plan.makespan if not r.failed else float("inf")
+    print(f"  {name:>10}: {r.makespan * 1e3:8.2f} ms  ({rel:5.2f}x LP)"
+          + ("  FAILED" if r.failed else ""))
+for t, (n, j) in enumerate(plan.cells):
+    print(f"  batch {n} installment {j}: requests/stage = "
+          f"{[int(x) for x in plan.samples[t]]}")
+
+# --- actually serve the requests (single CPU device plays every stage) ---
+print("\n=== executing the plan with the real decode loop ===")
+params = init_params(cfg, policy, seed=0, dtype=jnp.float32)
+serve_step = jax.jit(make_serve_step(cfg, policy), donate_argnums=(1,))
+t0 = time.time()
+total_tokens = 0
+for n in range(N_BATCHES):
+    batch = make_batch(cfg, BATCH, PROMPT, step=n)
+    toks = jnp.asarray(batch["tokens"])
+    logits, cache, pos = prefill(params, cfg, policy, toks, max_len=PROMPT + GEN)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    outs = []
+    for i in range(GEN):
+        logits, cache = serve_step(params, cache, nxt, jnp.int32(pos + i))
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(nxt))
+    total_tokens += GEN * BATCH
+    print(f"  batch {n}: generated {GEN} tokens x {BATCH} requests; "
+          f"head of request 0: {np.concatenate(outs, 1)[0, :5].tolist()}")
+dt = time.time() - t0
+print(f"served {total_tokens} tokens in {dt:.2f}s "
+      f"({total_tokens / dt:.1f} tok/s on {jax.default_backend()})")
+print("serve_multiload OK")

@@ -1,0 +1,35 @@
+"""Inject the generated roofline table into EXPERIMENTS.md (idempotent).
+
+  PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    subprocess.run([sys.executable, "-m", "benchmarks.roofline", "--mesh", "single"],
+                   cwd=ROOT, env=env, check=True, capture_output=True)
+    md = open(os.path.join(ROOT, "bench_out", "roofline_single.md")).read()
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    exp = open(exp_path).read()
+    block = ("<!-- ROOFLINE_TABLE -->\n\n### Single-pod roofline table "
+             "(generated; `(auto)` rows = GSPMD-auto fallback records)\n\n"
+             + md + "\n<!-- /ROOFLINE_TABLE -->")
+    if "<!-- /ROOFLINE_TABLE -->" in exp:
+        exp = re.sub(r"<!-- ROOFLINE_TABLE -->.*?<!-- /ROOFLINE_TABLE -->", block,
+                     exp, flags=re.S)
+    else:
+        exp = exp.replace("<!-- ROOFLINE_TABLE -->", block)
+    open(exp_path, "w").write(exp)
+    print("EXPERIMENTS.md roofline table updated "
+          f"({md.count(chr(10)) - 1} rows)")
+
+
+if __name__ == "__main__":
+    main()

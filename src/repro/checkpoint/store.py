@@ -1,0 +1,150 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout:  <dir>/step_<k>/{manifest.json, arrays.npz}   (+ step_<k>.tmp during
+write, renamed atomically on completion so a crash never leaves a torn
+checkpoint).  Restore accepts a target sharding tree and `device_put`s each
+leaf accordingly — restoring onto a *different* mesh/chain than the one that
+saved is the elastic-restart path.
+
+On a real multi-host fleet each host writes its own shard file and the
+manifest carries the global shape/sharding metadata; this in-process version
+keeps the same interface (manifest + payload + atomic rename + async writer)
+with a single payload file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: dict | None = None) -> str:
+    """Write a checkpoint synchronously; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(name.split("_")[1])
+        for name in os.listdir(directory)
+        if name.startswith("step_") and not name.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target_tree, shardings=None):
+    """Restore into the structure of ``target_tree`` (shapes must match).
+
+    ``shardings``: optional pytree of jax.sharding.Sharding — each leaf is
+    device_put with its sharding (elastic restore onto a new mesh).
+    Returns (tree, metadata).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves_p)
+    )
+    out = []
+    for (pth, leaf), shard in zip(leaves_p, shard_leaves):
+        key = _SEP.join(_path_str(p) for p in pth)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs target {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None else jax.numpy.asarray(arr))
+    return treedef.unflatten(out), manifest["metadata"]
+
+
+class CheckpointManager:
+    """Async, bounded-retention checkpoint writer."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save_async(self, step: int, tree, metadata=None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, metadata)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,75 @@
+"""repro.core — the paper's contribution: optimal multi-load divisible-load
+scheduling on a heterogeneous linear processor chain (Gallet–Robert–Vivien,
+INRIA RR-6235, 2007), plus the adversary heuristics and the §5 extensions.
+"""
+
+from .closed_form import (
+    LAMBDA_DIVERGENCE,
+    LAMBDA_SINGLE_INSTALLMENT,
+    example_instance,
+    hand_schedule_lambda_3_4,
+    makespan_1,
+    makespan_2,
+    multi_inst_makespan,
+    multi_inst_q2,
+    schedule_section_3_2,
+)
+from .heuristics import (
+    ALL_HEURISTICS,
+    HeuristicResult,
+    heuristic_b,
+    multi_inst,
+    simple,
+    single_inst,
+    single_load,
+)
+from .instance import Chain, Instance, Loads, random_instance
+from .lp import ScheduleLP, build_lp, extract_schedule
+from .planner import BatchSpec, DLTPlan, LinkSpec, Planner, StageSpec
+from .schedule import Schedule, check_feasible
+from .simplex import SimplexResult, solve_simplex
+from .simulator import simulate
+from .solver import LPResult, lower_bound, solve
+from .theory import QStarResult, optimal_installments, q_monotonicity
+
+__all__ = [
+    "Chain",
+    "Loads",
+    "Instance",
+    "random_instance",
+    "Schedule",
+    "check_feasible",
+    "simulate",
+    "ScheduleLP",
+    "build_lp",
+    "extract_schedule",
+    "SimplexResult",
+    "solve_simplex",
+    "LPResult",
+    "solve",
+    "lower_bound",
+    "BatchSpec",
+    "DLTPlan",
+    "LinkSpec",
+    "Planner",
+    "StageSpec",
+    "HeuristicResult",
+    "simple",
+    "single_load",
+    "single_inst",
+    "multi_inst",
+    "heuristic_b",
+    "ALL_HEURISTICS",
+    "QStarResult",
+    "q_monotonicity",
+    "optimal_installments",
+    "LAMBDA_SINGLE_INSTALLMENT",
+    "LAMBDA_DIVERGENCE",
+    "example_instance",
+    "schedule_section_3_2",
+    "makespan_1",
+    "makespan_2",
+    "multi_inst_q2",
+    "multi_inst_makespan",
+    "hand_schedule_lambda_3_4",
+]

@@ -1,0 +1,474 @@
+"""The comparison heuristics of paper §6 (and the [18]/[19] algorithms of §3).
+
+All heuristics produce *fraction assignments* (gamma) plus an installment
+structure; the achieved makespan is always measured by replaying the fractions
+through the ASAP simulator (`repro.core.simulator`) — the exact counterpart of
+the paper's Perl-script + Simgrid protocol.
+
+Implemented strategies:
+
+  SIMPLE        one installment per load, fractions proportional to speeds.
+  SINGLELOAD    [18] applied load by load: per-load equal-finish solve whose
+                time origin is the availability date of the *first* link —
+                downstream link availability is ignored (the paper explains
+                this is why it collapses when communications are expensive).
+  SINGLEINST    [19] single-installment: load-by-load equal-completion solve
+                with full knowledge of link/port availability.
+  MULTIINST     [19] multi-installment: load-by-load; each installment is the
+                largest equal-compute-duration chunk whose communications
+                complete before the processors finish the previous chunk
+                (no idle).  May FAIL to cover a load (paper §3.4 case 1) —
+                `MultiInstFailure` reports it.  ``cap`` bounds installments
+                per load; the capped variant dumps the remainder in the last
+                installment (MULTIINST-n of §6).
+  HEURISTIC_B   reconstruction of [19]'s Heuristic B: like SINGLEINST but the
+                participating set is the best prefix P_1..P_p per load.
+
+NOTE — faithfulness: [19]'s exact pseudo-code is not reproduced in the paper
+under study; SINGLEINST/MULTIINST follow the defining principles quoted in
+§3.1 ("all processors complete simultaneously ...", "each installment is the
+largest possible ...", "keep processors busy").  The reconstruction is
+validated exactly against every closed form the paper derives for them on the
+motivating example (tests/test_motivating_example.py): the single-installment
+regime and threshold, the geometric installment sizes gamma_1^k(2) =
+lambda^k * gamma_2^1(1), the installment-count formula Q_2, the makespan 9/10
+at lambda = 3/4, and the divergence (no solution) for lambda < (sqrt(17)+1)/8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .instance import Instance
+from .schedule import Schedule
+from .simplex import solve_simplex
+from .simulator import simulate
+
+__all__ = [
+    "HeuristicResult",
+    "simple",
+    "single_load",
+    "single_inst",
+    "multi_inst",
+    "heuristic_b",
+    "ALL_HEURISTICS",
+]
+
+_TOL = 1e-12
+
+
+@dataclasses.dataclass
+class HeuristicResult:
+    name: str
+    instance: Instance | None  # with the heuristic's installment structure
+    gamma: np.ndarray | None  # [m, T]
+    schedule: Schedule | None  # ASAP replay
+    failed: bool = False
+    reason: str = ""
+
+    @property
+    def makespan(self) -> float:
+        return self.schedule.makespan if self.schedule is not None else np.inf
+
+
+class _State:
+    """Platform availability carried across the load-by-load constructions."""
+
+    def __init__(self, inst: Instance):
+        self.inst = inst
+        m = inst.m
+        self.last_ce = np.zeros(max(m - 1, 0))  # last comm end on link i
+        self.proc_free = inst.chain.tau.copy()  # last comp end on P_i
+
+    def link_ready(self) -> np.ndarray:
+        """Earliest start for the next message on each link ((2b) + (2)/(3))."""
+        m = self.inst.m
+        r = self.last_ce.copy()
+        for i in range(m - 1):
+            if i + 1 <= m - 2:
+                r[i] = max(r[i], self.last_ce[i + 1])
+        return r
+
+    def apply_cell(self, n: int, gamma_col: np.ndarray) -> None:
+        """ASAP-execute one cell (same recurrences as the simulator)."""
+        inst = self.inst
+        m = inst.m
+        vcomm, vcomp = inst.loads.v_comm[n], inst.loads.v_comp[n]
+        rel = inst.loads.release[n]
+        suffix = np.concatenate([np.cumsum(gamma_col[::-1])[::-1], [0.0]])
+        ready = self.link_ready()
+        prev_ce = 0.0
+        for i in range(m - 1):
+            lo = ready[i]
+            if i == 0:
+                lo = max(lo, rel)
+            else:
+                lo = max(lo, prev_ce)
+            dur = inst.chain.latency[i] + inst.chain.z[i] * vcomm * suffix[i + 1]
+            ce = lo + dur
+            self.last_ce[i] = ce
+            arrival_of = ce
+            prev_ce = ce
+            # computation on P_{i+1}
+            ps = max(self.proc_free[i + 1], arrival_of)
+            self.proc_free[i + 1] = ps + inst.w_of(i + 1, n) * vcomp * gamma_col[i + 1]
+        # P_0
+        ps0 = max(self.proc_free[0], rel)
+        self.proc_free[0] = ps0 + inst.w_of(0, n) * vcomp * gamma_col[0]
+
+
+def _finalize(name: str, inst: Instance, q: list[int], cols: list[np.ndarray]) -> HeuristicResult:
+    inst_q = inst.with_q(q)
+    gamma = np.stack(cols, axis=1)
+    sched = simulate(inst_q, gamma)
+    return HeuristicResult(name=name, instance=inst_q, gamma=gamma, schedule=sched)
+
+
+# --------------------------------------------------------------------------
+# per-load equal-finish LP (the [18]/[19] building block)
+# --------------------------------------------------------------------------
+
+
+def _equal_finish_load(
+    inst: Instance,
+    n: int,
+    proc_free: np.ndarray,
+    link_ready: np.ndarray,
+    participants: np.ndarray | None = None,
+) -> np.ndarray | None:
+    """Fractions for load ``n`` s.t. all participants finish simultaneously,
+    minimizing that common finish time given the platform state.  Returns
+    gamma [m] or None if the tiny LP fails (should not happen)."""
+    m = inst.m
+    part = np.ones(m, dtype=bool) if participants is None else participants
+    vcomm, vcomp = inst.loads.v_comm[n], inst.loads.v_comp[n]
+    rel = inst.loads.release[n]
+    z, K = inst.chain.z, inst.chain.latency
+    w = np.array([inst.w_of(i, n) for i in range(m)])
+
+    if m == 1:
+        return np.array([1.0])
+
+    # variables: g (m), cs (m-1), ps (m), T
+    ng = m
+    ncs = m - 1
+    nps = m
+    nv = ng + ncs + nps + 1
+    g0, cs0, ps0, Ti = 0, ng, ng + ncs, ng + ncs + nps
+    c = np.zeros(nv)
+    c[Ti] = 1.0
+
+    Aub, bub, Aeq, beq = [], [], [], []
+
+    def ub(row, rhs):
+        Aub.append(row)
+        bub.append(rhs)
+
+    def eq(row, rhs):
+        Aeq.append(row)
+        beq.append(rhs)
+
+    def comm_dur_row(i):
+        """coefficients (on g) of duration of link-i message + constant."""
+        row = np.zeros(nv)
+        for k in range(i + 1, m):
+            row[g0 + k] = z[i] * vcomm
+        return row, K[i]
+
+    for i in range(m - 1):
+        # cs_i >= link_ready_i (and release for the head link)
+        row = np.zeros(nv)
+        row[cs0 + i] = -1.0
+        ub(row.copy(), -float(max(link_ready[i], rel if i == 0 else 0.0)))
+        if i >= 1:
+            # cs_i >= cs_{i-1} + dur_{i-1}
+            row = np.zeros(nv)
+            row[cs0 + i] = -1.0
+            row[cs0 + i - 1] = 1.0
+            drow, dconst = comm_dur_row(i - 1)
+            row += drow
+            ub(row, -dconst)
+    for i in range(m):
+        row = np.zeros(nv)
+        row[ps0 + i] = -1.0
+        ub(row.copy(), -float(max(proc_free[i], rel if i == 0 else 0.0)))
+        if i >= 1:
+            # ps_i >= ce_{i-1}
+            row = np.zeros(nv)
+            row[ps0 + i] = -1.0
+            row[cs0 + i - 1] = 1.0
+            drow, dconst = comm_dur_row(i - 1)
+            row += drow
+            ub(row, -dconst)
+        if part[i]:
+            # ps_i + w_i * Vp * g_i == T
+            row = np.zeros(nv)
+            row[ps0 + i] = 1.0
+            row[g0 + i] = w[i] * vcomp
+            row[Ti] = -1.0
+            eq(row, 0.0)
+        else:
+            row = np.zeros(nv)
+            row[g0 + i] = 1.0
+            eq(row, 0.0)
+    row = np.zeros(nv)
+    row[g0 : g0 + m] = 1.0
+    eq(row, 1.0)
+
+    res = solve_simplex(c, np.array(Aub), np.array(bub), np.array(Aeq), np.array(beq))
+    if not res.ok:
+        return None
+    return np.maximum(res.x[g0 : g0 + m], 0.0)
+
+
+def _max_chunk(
+    inst: Instance,
+    n: int,
+    deadlines: np.ndarray,
+    link_ready: np.ndarray,
+    remaining: float,
+) -> float | None:
+    """MULTIINST chunk: the largest equal-compute-duration theta such that all
+    chunk communications complete before each processor's deadline.  Returns
+    theta (seconds of compute per processor) or None if infeasible."""
+    m = inst.m
+    vcomm, vcomp = inst.loads.v_comm[n], inst.loads.v_comp[n]
+    rel = inst.loads.release[n]
+    z, K = inst.chain.z, inst.chain.latency
+    w = np.array([inst.w_of(i, n) for i in range(m)])
+    inv_w = 1.0 / w
+    # gamma_i = theta / (w_i * Vp); volume over link i = Vc * theta/Vp * sum_{k>i} 1/w_k
+    A = (vcomm / vcomp) * np.array([inv_w[i + 1 :].sum() for i in range(m - 1)])
+
+    # variables: theta, cs_0..cs_{m-2}
+    nv = 1 + (m - 1)
+    c = np.zeros(nv)
+    c[0] = -1.0  # maximize theta
+    Aub, bub = [], []
+    for i in range(m - 1):
+        row = np.zeros(nv)
+        row[1 + i] = -1.0
+        Aub.append(row)
+        bub.append(-float(max(link_ready[i], rel if i == 0 else 0.0)))
+        if i >= 1:
+            row = np.zeros(nv)
+            row[1 + i] = -1.0
+            row[1 + i - 1] = 1.0
+            row[0] = z[i - 1] * A[i - 1]
+            Aub.append(row)
+            bub.append(-float(K[i - 1]))
+        # arrival deadline at P_{i+1}: cs_i + K_i + z_i A_i theta <= D_{i+1}
+        row = np.zeros(nv)
+        row[1 + i] = 1.0
+        row[0] = z[i] * A[i]
+        Aub.append(row)
+        bub.append(float(deadlines[i + 1] - K[i]))
+    # distributed fraction <= remaining: theta * sum(1/(w_i Vp)) <= remaining
+    row = np.zeros(nv)
+    row[0] = inv_w.sum() / vcomp
+    Aub.append(row)
+    bub.append(float(remaining))
+
+    res = solve_simplex(c, np.array(Aub), np.array(bub))
+    if not res.ok:
+        return None
+    return max(float(res.x[0]), 0.0)
+
+
+# --------------------------------------------------------------------------
+# the strategies
+# --------------------------------------------------------------------------
+
+
+def simple(inst: Instance) -> HeuristicResult:
+    """SIMPLE: single installment, fractions proportional to processor speeds."""
+    m = inst.m
+    cols = []
+    for n in range(inst.N):
+        speeds = np.array([1.0 / inst.w_of(i, n) for i in range(m)])
+        cols.append(speeds / speeds.sum())
+    return _finalize("SIMPLE", inst, [1] * inst.N, cols)
+
+
+def single_load(inst: Instance) -> HeuristicResult:
+    """SINGLELOAD [18]: per-load equal-finish with the time origin reset to the
+    availability of the first link; downstream link availability ignored."""
+    m = inst.m
+    st = _State(inst)
+    cols = []
+    for n in range(inst.N):
+        origin = st.last_ce[0] if m > 1 else 0.0
+        ready = np.full(max(m - 1, 0), origin)
+        g = _equal_finish_load(inst, n, st.proc_free, ready)
+        if g is None:
+            return HeuristicResult("SINGLELOAD", None, None, None, True, f"load {n} LP failed")
+        st.apply_cell(n, g)
+        cols.append(g)
+    return _finalize("SINGLELOAD", inst, [1] * inst.N, cols)
+
+
+def single_inst(inst: Instance) -> HeuristicResult:
+    """SINGLEINST: load-by-load equal-completion with full availability info."""
+    st = _State(inst)
+    cols = []
+    for n in range(inst.N):
+        g = _equal_finish_load(inst, n, st.proc_free, st.link_ready())
+        if g is None:
+            return HeuristicResult("SINGLEINST", None, None, None, True, f"load {n} LP failed")
+        st.apply_cell(n, g)
+        cols.append(g)
+    return _finalize("SINGLEINST", inst, [1] * inst.N, cols)
+
+
+def heuristic_b(inst: Instance) -> HeuristicResult:
+    """HEURISTIC B (reconstruction): SINGLEINST over the best processor prefix."""
+    m = inst.m
+    st = _State(inst)
+    cols = []
+    for n in range(inst.N):
+        best_g, best_T = None, np.inf
+        for p in range(1, m + 1):
+            part = np.zeros(m, dtype=bool)
+            part[:p] = True
+            g = _equal_finish_load(inst, n, st.proc_free, st.link_ready(), participants=part)
+            if g is None:
+                continue
+            # evaluate this choice by tentative ASAP application
+            tmp = _State(inst)
+            tmp.last_ce = st.last_ce.copy()
+            tmp.proc_free = st.proc_free.copy()
+            tmp.apply_cell(n, g)
+            T = tmp.proc_free.max()
+            if T < best_T - _TOL:
+                best_T, best_g = T, g
+        if best_g is None:
+            return HeuristicResult("HEURISTIC_B", None, None, None, True, f"load {n} failed")
+        st.apply_cell(n, best_g)
+        cols.append(best_g)
+    return _finalize("HEURISTIC_B", inst, [1] * inst.N, cols)
+
+
+def _dump_remainder(inst: Instance, n: int, st: "_State", remaining: float) -> np.ndarray:
+    """MULTIINST-n's final installment: distribute all remaining work.
+
+    Uses the equal-finish rule over the best processor prefix (as HEURISTIC B
+    does per load), scaled to the remaining fraction; the 1-processor prefix
+    (everything on P_1, no communication) is always feasible, so this never
+    fails.
+    """
+    m = inst.m
+    best_g, best_T = None, np.inf
+    for p in range(1, m + 1):
+        part = np.zeros(m, dtype=bool)
+        part[:p] = True
+        if p == 1:
+            g = np.zeros(m)
+            g[0] = 1.0
+        else:
+            g = _equal_finish_load(inst, n, st.proc_free, st.link_ready(), participants=part)
+            if g is None:
+                continue
+        g = g * remaining  # scaled fractions only shorten every duration
+        tmp = _State(inst)
+        tmp.last_ce = st.last_ce.copy()
+        tmp.proc_free = st.proc_free.copy()
+        tmp.apply_cell(n, g)
+        T = tmp.proc_free.max()
+        if T < best_T - _TOL:
+            best_T, best_g = T, g
+    return best_g
+
+
+def multi_inst(inst: Instance, cap: int | None = None, max_uncapped: int = 10_000) -> HeuristicResult:
+    """MULTIINST (optionally capped at ``cap`` installments per load)."""
+    m = inst.m
+    name = f"MULTIINST_{cap}" if cap else "MULTIINST"
+    if m == 1:
+        cols = [np.array([1.0]) for _ in range(inst.N)]
+        return _finalize(name, inst, [1] * inst.N, cols)
+    st = _State(inst)
+    cols: list[np.ndarray] = []
+    q: list[int] = []
+    for n in range(inst.N):
+        vcomp = inst.loads.v_comp[n]
+        inv_w = np.array([1.0 / inst.w_of(i, n) for i in range(m)])
+        if n == 0:
+            # first load: single installment, equal finish (cf. §3: the first
+            # load is sent in one installment)
+            g = _equal_finish_load(inst, n, st.proc_free, st.link_ready())
+            if g is None:
+                return HeuristicResult(name, None, None, None, True, "load 0 LP failed")
+            st.apply_cell(n, g)
+            cols.append(g)
+            q.append(1)
+            continue
+        remaining = 1.0
+        k = 0
+        load_cols: list[np.ndarray] = []
+        while remaining > 1e-12:
+            k += 1
+            limit = cap if cap is not None else max_uncapped
+            if cap is not None and k == cap:
+                # dump the remainder (MULTIINST-n semantics)
+                g = _dump_remainder(inst, n, st, remaining)
+                st.apply_cell(n, g)
+                load_cols.append(g)
+                remaining = 0.0
+                break
+            theta = _max_chunk(inst, n, st.proc_free, st.link_ready(), remaining)
+            if theta is None:
+                if cap is not None:
+                    # MULTIINST-n semantics: no further feasible installment —
+                    # the last installment distributes all the remaining work
+                    g = _dump_remainder(inst, n, st, remaining)
+                    st.apply_cell(n, g)
+                    load_cols.append(g)
+                    remaining = 0.0
+                    break
+                return HeuristicResult(name, None, None, None, True, f"load {n} chunk LP failed")
+            frac = theta * inv_w.sum() / vcomp
+            if frac <= 1e-12:
+                if cap is None:
+                    return HeuristicResult(
+                        name,
+                        None,
+                        None,
+                        None,
+                        True,
+                        f"load {n}: installments cannot cover the load "
+                        f"(remaining {remaining:.6f}) — paper §3.4 case 1",
+                    )
+                continue  # capped: keep iterating until the dump installment
+            g = (theta / vcomp) * inv_w
+            if frac >= remaining - 1e-12:
+                g = remaining * inv_w / inv_w.sum()
+                remaining = 0.0
+            else:
+                remaining -= frac
+            st.apply_cell(n, g)
+            load_cols.append(g)
+            if k >= limit:
+                if remaining > 1e-12:
+                    if cap is None:
+                        return HeuristicResult(
+                            name, None, None, None, True, f"load {n}: >{limit} installments"
+                        )
+                    g = _dump_remainder(inst, n, st, remaining)
+                    st.apply_cell(n, g)
+                    load_cols.append(g)
+                    remaining = 0.0
+                break
+        cols.extend(load_cols)
+        q.append(len(load_cols))
+    return _finalize(name, inst, q, cols)
+
+
+ALL_HEURISTICS = {
+    "SIMPLE": simple,
+    "SINGLELOAD": single_load,
+    "SINGLEINST": single_inst,
+    "HEURISTIC_B": heuristic_b,
+    "MULTIINST": multi_inst,
+}

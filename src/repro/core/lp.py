@@ -1,0 +1,261 @@
+"""Linear-program builder — the paper's Fig. 6, verbatim, plus §5 extensions.
+
+Variables (end-times substituted out via constraints (5)/(7), which halves the
+variable count without changing the feasible set):
+
+  comm_start[i, t]   i in 0..m-2, t in 0..T-1   (T = total installments)
+  comp_start[i, t]   i in 0..m-1
+  gamma[i, t]        i in 0..m-1
+  makespan
+  completion[n]      (optional, for affine objectives over completion times)
+
+with  comm_end(i,t) = comm_start[i,t] + K_i + z_i * V_comm(n_t) * sum_{k>i} gamma[k,t]
+and   comp_end(i,t) = comp_start[i,t] + w_i(n_t) * V_comp(n_t) * gamma[i,t].
+
+Constraint families keep the paper's numbering; (2b)/(3b) are the own-port
+serialization inequalities that the paper leaves implicit (they are implied
+for m >= 3 but necessary for m = 2 — see DESIGN.md).
+
+§5 extensions implemented: per-message affine latencies K_i, processor
+availability dates tau_i, load release dates, unrelated machines w_i^n, and
+affine objectives  sum_n alpha_n C_n + beta * makespan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .instance import Instance
+from .schedule import Schedule, comm_durations, comp_durations
+
+__all__ = ["ScheduleLP", "build_lp", "extract_schedule"]
+
+
+@dataclasses.dataclass
+class ScheduleLP:
+    instance: Instance
+    n_vars: int
+    c: np.ndarray
+    # sparse triplets
+    ub_rows: list
+    ub_cols: list
+    ub_vals: list
+    b_ub: list
+    eq_rows: list
+    eq_cols: list
+    eq_vals: list
+    b_eq: list
+    # variable offsets
+    off_comm: int
+    off_comp: int
+    off_gamma: int
+    off_mk: int
+    off_cn: int  # -1 if absent
+    T: int
+
+    def comm(self, i: int, t: int) -> int:
+        return self.off_comm + i * self.T + t
+
+    def comp(self, i: int, t: int) -> int:
+        return self.off_comp + i * self.T + t
+
+    def gam(self, i: int, t: int) -> int:
+        return self.off_gamma + i * self.T + t
+
+    def dense_ub(self) -> tuple[np.ndarray, np.ndarray]:
+        A = np.zeros((len(self.b_ub), self.n_vars))
+        A[self.ub_rows, self.ub_cols] = 0.0  # ensure shape
+        for r, c_, v in zip(self.ub_rows, self.ub_cols, self.ub_vals):
+            A[r, c_] += v
+        return A, np.asarray(self.b_ub)
+
+    def dense_eq(self) -> tuple[np.ndarray, np.ndarray]:
+        A = np.zeros((len(self.b_eq), self.n_vars))
+        for r, c_, v in zip(self.eq_rows, self.eq_cols, self.eq_vals):
+            A[r, c_] += v
+        return A, np.asarray(self.b_eq)
+
+    def sparse_ub(self):
+        import scipy.sparse as sp
+
+        return sp.coo_matrix(
+            (self.ub_vals, (self.ub_rows, self.ub_cols)), shape=(len(self.b_ub), self.n_vars)
+        ).tocsr()
+
+    def sparse_eq(self):
+        import scipy.sparse as sp
+
+        return sp.coo_matrix(
+            (self.eq_vals, (self.eq_rows, self.eq_cols)), shape=(len(self.b_eq), self.n_vars)
+        ).tocsr()
+
+
+def build_lp(
+    inst: Instance,
+    objective: str = "makespan",
+    weights=None,
+    beta: float = 0.0,
+) -> ScheduleLP:
+    """Build the Fig. 6 LP for ``inst``.
+
+    objective:
+      "makespan"    — min makespan (the paper's objective);
+      "completion"  — min sum_n weights[n] * C_n + beta * makespan (§5 affine
+                      objective; default weights = 1 → average completion time).
+    """
+    m = inst.m
+    cells = list(inst.cells())
+    T = len(cells)
+    n_comm = max(m - 1, 0) * T
+    n_comp = m * T
+    off_comm = 0
+    off_comp = n_comm
+    off_gamma = n_comm + n_comp
+    off_mk = off_gamma + m * T
+    want_cn = objective == "completion"
+    off_cn = off_mk + 1 if want_cn else -1
+    n_vars = off_mk + 1 + (inst.N if want_cn else 0)
+
+    lp = ScheduleLP(
+        instance=inst,
+        n_vars=n_vars,
+        c=np.zeros(n_vars),
+        ub_rows=[],
+        ub_cols=[],
+        ub_vals=[],
+        b_ub=[],
+        eq_rows=[],
+        eq_cols=[],
+        eq_vals=[],
+        b_eq=[],
+        off_comm=off_comm,
+        off_comp=off_comp,
+        off_gamma=off_gamma,
+        off_mk=off_mk,
+        off_cn=off_cn,
+        T=T,
+    )
+
+    z, K, tau = inst.chain.z, inst.chain.latency, inst.chain.tau
+    vcomm = inst.loads.v_comm
+    vcomp = inst.loads.v_comp
+    rel = inst.loads.release
+
+    def comm_end_terms(i: int, t: int):
+        """Linear terms + constant for comm_end(i, t)."""
+        n, _ = cells[t]
+        terms = [(lp.comm(i, t), 1.0)]
+        for k in range(i + 1, m):
+            terms.append((lp.gam(k, t), z[i] * vcomm[n]))
+        return terms, float(K[i])
+
+    def comp_end_terms(i: int, t: int):
+        n, _ = cells[t]
+        return [(lp.comp(i, t), 1.0), (lp.gam(i, t), inst.w_of(i, n) * vcomp[n])], 0.0
+
+    def add_ge(lhs_terms, rhs_terms, rhs_const: float):
+        """lhs >= rhs + const  ->  -(lhs) + rhs <= -const   (<= row)."""
+        r = len(lp.b_ub)
+        for v, cf in lhs_terms:
+            lp.ub_rows.append(r)
+            lp.ub_cols.append(v)
+            lp.ub_vals.append(-cf)
+        for v, cf in rhs_terms:
+            lp.ub_rows.append(r)
+            lp.ub_cols.append(v)
+            lp.ub_vals.append(cf)
+        lp.b_ub.append(-rhs_const)
+
+    for t, (n, _) in enumerate(cells):
+        for i in range(m - 1):
+            # (1) store-and-forward
+            if i >= 1:
+                rt, rc = comm_end_terms(i - 1, t)
+                add_ge([(lp.comm(i, t), 1.0)], rt, rc)
+            if t >= 1:
+                # (2b)/(3b) own-port serialization
+                rt, rc = comm_end_terms(i, t - 1)
+                add_ge([(lp.comm(i, t), 1.0)], rt, rc)
+                # (2)/(3) receive-after-forward
+                if i + 1 <= m - 2:
+                    rt, rc = comm_end_terms(i + 1, t - 1)
+                    add_ge([(lp.comm(i, t), 1.0)], rt, rc)
+            # (4) release dates (plain >=0 is a variable bound)
+            if i == 0 and rel[n] > 0:
+                add_ge([(lp.comm(0, t), 1.0)], [], float(rel[n]))
+        for i in range(m):
+            # (6) compute after the corresponding receive
+            if i >= 1:
+                rt, rc = comm_end_terms(i - 1, t)
+                add_ge([(lp.comp(i, t), 1.0)], rt, rc)
+            # (8)/(9) compute serialization
+            if t >= 1:
+                rt, rc = comp_end_terms(i, t - 1)
+                add_ge([(lp.comp(i, t), 1.0)], rt, rc)
+            # (10) availability dates
+            if t == 0 and tau[i] > 0:
+                add_ge([(lp.comp(i, 0), 1.0)], [], float(tau[i]))
+            if i == 0 and rel[n] > 0:
+                add_ge([(lp.comp(0, t), 1.0)], [], float(rel[n]))
+
+    # (12) completeness (equalities)
+    for n in range(inst.N):
+        r = len(lp.b_eq)
+        for t, (ln, _) in enumerate(cells):
+            if ln == n:
+                for i in range(m):
+                    lp.eq_rows.append(r)
+                    lp.eq_cols.append(lp.gam(i, t))
+                    lp.eq_vals.append(1.0)
+        lp.b_eq.append(1.0)
+
+    # (13) makespan >= every completion
+    for i in range(m):
+        rt, rc = comp_end_terms(i, T - 1)
+        add_ge([(off_mk, 1.0)], rt, rc)
+
+    # completion-time variables (affine objectives, §5)
+    if want_cn:
+        last_cell = {}
+        for t, (n, _) in enumerate(cells):
+            last_cell[n] = t
+        for n in range(inst.N):
+            for i in range(m):
+                rt, rc = comp_end_terms(i, last_cell[n])
+                add_ge([(off_cn + n, 1.0)], rt, rc)
+
+    # objective
+    if objective == "makespan":
+        lp.c[off_mk] = 1.0
+    elif objective == "completion":
+        w = np.ones(inst.N) if weights is None else np.asarray(weights, dtype=np.float64)
+        lp.c[off_cn : off_cn + inst.N] = w
+        lp.c[off_mk] = beta
+        if beta == 0.0:
+            # keep makespan tied down so the solution stays interpretable
+            lp.c[off_mk] = 1e-9
+    else:
+        raise ValueError(objective)
+    return lp
+
+
+def extract_schedule(lp: ScheduleLP, x: np.ndarray) -> Schedule:
+    """Turn an LP solution vector into a Schedule (ends recomputed from starts)."""
+    inst = lp.instance
+    m, T = inst.m, lp.T
+    gamma = np.maximum(x[lp.off_gamma : lp.off_gamma + m * T].reshape(m, T), 0.0)
+    cs = x[lp.off_comm : lp.off_comm + max(m - 1, 0) * T].reshape(max(m - 1, 0), T)
+    ps = x[lp.off_comp : lp.off_comp + m * T].reshape(m, T)
+    dcomm = comm_durations(inst, gamma)
+    dcomp = comp_durations(inst, gamma)
+    return Schedule(
+        instance=inst,
+        gamma=gamma,
+        comm_start=cs,
+        comm_end=cs + dcomm,
+        comp_start=ps,
+        comp_end=ps + dcomp,
+        makespan=float(x[lp.off_mk]),
+    )

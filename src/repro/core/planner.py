@@ -1,0 +1,181 @@
+"""TPU-facing DLT planner: turns a (model, chain-of-device-groups, batch
+stream) description into a paper Instance, solves it, and emits an executable
+installment plan for the runtime.
+
+Mapping (DESIGN.md §2):
+  * chain stage  = pod / ICI subdomain / host group (the linear axis),
+  * w_i          = seconds per unit work = 1 / (stage effective FLOP/s),
+                   updated online from observed step times (straggler feedback),
+  * z_i, K_i     = seconds per byte + message startup on the stage_i->stage_{i+1}
+                   link (ICI or DCN),
+  * load n       = a global batch: V_comm = bytes of its tokens/embeddings,
+                   V_comp = model FLOPs to process it,
+  * installment  = a microbatch slice; gamma[i, t] becomes an integer number
+                   of samples per stage per round (largest-remainder rounding).
+
+The plan is re-solved on failure (drop a stage; availability dates tau_i model
+restore times) and on straggler drift (w_i EWMA) — `replan_*` below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .instance import Chain, Instance, Loads
+from .solver import LPResult, solve
+
+__all__ = ["StageSpec", "LinkSpec", "BatchSpec", "DLTPlan", "Planner"]
+
+
+@dataclasses.dataclass
+class StageSpec:
+    """One stage of the linear chain (a pod / device group)."""
+
+    name: str
+    flops_per_sec: float  # effective sustained FLOP/s of the whole stage
+    available_at: float = 0.0  # tau_i (restore/join time)
+
+
+@dataclasses.dataclass
+class LinkSpec:
+    bytes_per_sec: float  # sustained point-to-point bandwidth
+    startup_sec: float = 0.0  # per-message latency K_i
+
+
+@dataclasses.dataclass
+class BatchSpec:
+    """One divisible load: a global batch of independent samples."""
+
+    num_samples: int
+    bytes_per_sample: float
+    flops_per_sample: float
+    release_at: float = 0.0
+
+
+@dataclasses.dataclass
+class DLTPlan:
+    """Executable plan: per (load, round) integer sample counts per stage."""
+
+    result: LPResult
+    batches: list
+    # samples[t][i] = integer samples of cell t's load on stage i
+    samples: list
+    cells: list  # (load index, installment index)
+    makespan: float
+
+    def stage_rounds(self, stage: int) -> list:
+        """[(load, installment, n_samples)] for one stage, in execution order."""
+        out = []
+        for t, (n, j) in enumerate(self.cells):
+            out.append((n, j, self.samples[t][stage]))
+        return out
+
+    def total_samples(self, load: int) -> int:
+        return sum(
+            s[i]
+            for t, s in enumerate(self.samples)
+            for i in range(len(s))
+            if self.cells[t][0] == load
+        )
+
+
+def _largest_remainder(frac: np.ndarray, total: int) -> np.ndarray:
+    """Round fractions-of-total to integers that sum exactly to ``total``."""
+    raw = frac * total
+    base = np.floor(raw).astype(np.int64)
+    short = int(total - base.sum())
+    if short > 0:
+        order = np.argsort(-(raw - base))
+        base[order[:short]] += 1
+    return base
+
+
+class Planner:
+    """Solve + maintain DLT schedules for a chain of device groups."""
+
+    def __init__(self, stages: list, links: list, ewma: float = 0.5):
+        if len(links) != max(len(stages) - 1, 0):
+            raise ValueError("need exactly len(stages)-1 links")
+        self.stages = list(stages)
+        self.links = list(links)
+        self.ewma = ewma
+
+    # ---------------- instance construction ----------------
+
+    def to_instance(self, batches: list, q: int | list = 1) -> Instance:
+        w = np.array([1.0 / s.flops_per_sec for s in self.stages])
+        z = np.array([1.0 / l.bytes_per_sec for l in self.links])
+        lat = np.array([l.startup_sec for l in self.links])
+        tau = np.array([s.available_at for s in self.stages])
+        chain = Chain(w=w, z=z, tau=tau, latency=lat)
+        loads = Loads(
+            v_comm=[b.num_samples * b.bytes_per_sample for b in batches],
+            v_comp=[b.num_samples * b.flops_per_sample for b in batches],
+            release=[b.release_at for b in batches],
+        )
+        return Instance(chain, loads, q=q)
+
+    # ---------------- planning ----------------
+
+    def plan(self, batches: list, q: int | list = 1, backend: str = "auto") -> DLTPlan:
+        inst = self.to_instance(batches, q=q)
+        res = solve(inst, backend=backend)
+        if not res.ok:
+            raise RuntimeError(f"DLT LP failed: {res.status}")
+        cells = list(inst.cells())
+        gamma = res.schedule.gamma  # [m, T]
+        samples = []
+        # integerize per load across all its cells jointly
+        for n, b in enumerate(batches):
+            cols = [t for t, (ln, _) in enumerate(cells) if ln == n]
+            flat = gamma[:, cols].reshape(-1)
+            ints = _largest_remainder(flat, b.num_samples).reshape(len(self.stages), len(cols))
+            for k, t in enumerate(cols):
+                while len(samples) <= t:
+                    samples.append(None)
+                samples[t] = ints[:, k]
+        return DLTPlan(
+            result=res, batches=list(batches), samples=samples, cells=cells, makespan=res.makespan
+        )
+
+    # ---------------- elasticity / fault tolerance ----------------
+
+    def replan_without_stage(
+        self, dead: int, batches: list, restore_delay: float = 0.0, q: int | list = 1
+    ) -> "tuple[Planner, DLTPlan]":
+        """Drop a failed stage, fuse its links, and re-solve from scratch.
+
+        ``restore_delay`` becomes the surviving stages' availability date tau_i
+        (the time to restore the last checkpoint onto the new chain).
+        """
+        stages = [s for k, s in enumerate(self.stages) if k != dead]
+        links = list(self.links)
+        if dead == 0:
+            links = links[1:]
+        elif dead == len(self.stages) - 1:
+            links = links[:-1]
+        else:
+            fused = LinkSpec(
+                bytes_per_sec=1.0
+                / (1.0 / links[dead - 1].bytes_per_sec + 1.0 / links[dead].bytes_per_sec),
+                startup_sec=links[dead - 1].startup_sec + links[dead].startup_sec,
+            )
+            links = links[: dead - 1] + [fused] + links[dead + 1 :]
+        stages = [
+            dataclasses.replace(s, available_at=max(s.available_at, restore_delay)) for s in stages
+        ]
+        p2 = Planner(stages, links, ewma=self.ewma)
+        return p2, p2.plan(batches, q=q)
+
+    def observe_step_time(self, stage: int, achieved_flops_per_sec: float) -> bool:
+        """Straggler feedback: EWMA-update a stage's effective speed.
+
+        Returns True when drift exceeds 10% — callers should re-plan.
+        """
+        s = self.stages[stage]
+        new = self.ewma * achieved_flops_per_sec + (1 - self.ewma) * s.flops_per_sec
+        drift = abs(new - s.flops_per_sec) / s.flops_per_sec
+        self.stages[stage] = dataclasses.replace(s, flops_per_sec=new)
+        return drift > 0.10

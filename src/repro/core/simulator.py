@@ -1,0 +1,79 @@
+"""ASAP event simulator for the linear-network platform model (the Simgrid
+stand-in of paper §6).
+
+Given an instance and the fractions ``gamma[i, t]`` (the only free decision
+once the fixed lexicographic distribution order of §2 is adopted), the ASAP
+(as-soon-as-possible) execution is the unique componentwise-minimal set of
+start times satisfying constraint families (1)-(10) — each start time is the
+max of its lower bounds.  The simulator therefore evaluates the *achieved*
+makespan of any fraction assignment, including those produced by the paper's
+adversary heuristics (SIMPLE, SINGLEINST, MULTIINST, ...), with the same cost
+model (incl. §5 per-message latencies) as the LP.
+
+It doubles as the replay validator for LP schedules: replaying the LP's
+fractions must reproduce the LP objective (property-tested).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .instance import Instance
+from .schedule import Schedule, comm_durations, comp_durations
+
+__all__ = ["simulate"]
+
+
+def simulate(inst: Instance, gamma: np.ndarray) -> Schedule:
+    """ASAP replay of fraction assignment ``gamma`` ([m, T]); returns a Schedule."""
+    m = inst.m
+    cells = list(inst.cells())
+    T = len(cells)
+    gamma = np.asarray(gamma, dtype=np.float64)
+    if gamma.shape != (m, T):
+        raise ValueError(f"gamma must be [m={m}, T={T}], got {gamma.shape}")
+
+    dcomm = comm_durations(inst, gamma)  # [m-1, T]
+    dcomp = comp_durations(inst, gamma)  # [m, T]
+
+    cs = np.zeros((max(m - 1, 0), T))
+    ce = np.zeros((max(m - 1, 0), T))
+    ps = np.zeros((m, T))
+    pe = np.zeros((m, T))
+
+    rel = inst.loads.release
+
+    for t, (n, _) in enumerate(cells):
+        # --- communications, upstream to downstream (store-and-forward) ---
+        for i in range(m - 1):
+            lo = 0.0
+            if i == 0:
+                lo = max(lo, rel[n])  # load leaves P_0 only after release
+            if i >= 1:
+                lo = max(lo, ce[i - 1, t])  # (1)
+            if t >= 1:
+                lo = max(lo, ce[i, t - 1])  # own-port serialization (2b/3b)
+                if i + 1 <= m - 2:
+                    lo = max(lo, ce[i + 1, t - 1])  # (2)/(3)
+            cs[i, t] = lo
+            ce[i, t] = lo + dcomm[i, t]
+        # --- computations ---
+        for i in range(m):
+            lo = inst.chain.tau[i] if t == 0 else pe[i, t - 1]  # (10), (8)/(9)
+            if i == 0:
+                lo = max(lo, rel[n])
+            else:
+                lo = max(lo, ce[i - 1, t])  # (6)
+            ps[i, t] = lo
+            pe[i, t] = lo + dcomp[i, t]
+
+    makespan = float(pe[:, T - 1].max()) if T else 0.0
+    return Schedule(
+        instance=inst,
+        gamma=gamma,
+        comm_start=cs,
+        comm_end=ce,
+        comp_start=ps,
+        comp_end=pe,
+        makespan=makespan,
+    )

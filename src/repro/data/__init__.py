@@ -1,0 +1,5 @@
+"""Data substrate."""
+
+from .pipeline import SyntheticStream, batch_load_spec, make_batch
+
+__all__ = ["SyntheticStream", "make_batch", "batch_load_spec"]

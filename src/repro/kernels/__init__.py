@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three layers:
+  <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target);
+  ops.py     — jit'd public wrapper (layout munging, block-size selection,
+               interpret=True auto-fallback off-TPU);
+  ref.py     — pure-jnp oracle, the allclose target for the test sweeps.
+
+Kernels: flash_attention (prefill), decode_attention (split-KV flash
+decoding), ssd_scan (Mamba-2 SSD chunked scan), rmsnorm (fused norm).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,110 @@
+"""Pallas TPU split-KV decode attention (flash-decoding) kernel.
+
+One new query token per (batch, head) against a ring/linear KV cache of
+``Smax`` entries, of which only ``cache_len`` (a runtime scalar, prefetched
+into SMEM) are valid.  Grid ``(B, H, nk)``; kv blocks are the innermost
+sequential dimension and carry the partial-softmax state in VMEM scratch —
+the TPU analogue of GPU flash-decoding's split-K + combine.
+
+The scalar prefetch means block visibility is dynamic: blocks entirely past
+``cache_len`` are skipped with ``pl.when`` (no MXU work), so decode cost
+scales with the *filled* cache, not the allocated one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel", "decode_attention_call"]
+
+NEG_INF = -1e30
+
+
+def decode_attention_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, window: int, bk: int, nk: int,
+):
+    ik = pl.program_id(2)
+    k_start = ik * bk
+    cache_len = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    visible = k_start < cache_len
+    if window > 0:
+        visible &= k_start + bk - 1 > cache_len - 1 - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [1, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [1, bk]
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = ki < cache_len
+        if window > 0:
+            mask &= ki > cache_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_call(q, k_cache, v_cache, cache_len, *, window=0, block_k=256,
+                          interpret=False):
+    """q [B,H,1,D], caches [B,KVH,Smax,D], cache_len scalar int32 -> [B,H,1,D]."""
+    B, H, _, D = q.shape
+    KVH, Smax = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    bk = min(block_k, Smax)
+    assert Smax % bk == 0, (Smax, bk)
+    nk = Smax // bk
+    grid = (B, H, nk)
+
+    kernel = functools.partial(
+        decode_attention_kernel, scale=D**-0.5, window=window, bk=bk, nk=nk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, len_ref: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, len_ref: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ik, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)

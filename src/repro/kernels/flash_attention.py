@@ -1,0 +1,122 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Grid ``(B, H, nq, nk)`` — the kv dimension is innermost and sequential, so the
+online-softmax running state (max / denominator / accumulator) lives in VMEM
+scratch that persists across kv steps.  Blocks:
+
+  q   [1, 1, bq, D]   VMEM   (per (batch, head, q-block))
+  k,v [1, 1, bk, D]   VMEM   (kv head = h // G under GQA — the index map does
+                              the group lookup, K/V are never repeated in HBM)
+  out [1, 1, bq, D]   VMEM   written once, on the last visited kv block
+
+Causal / sliding-window masking is applied per block via 2D iotas; fully
+masked kv blocks are skipped with ``pl.when`` (the TPU grid still iterates
+them but issues no compute — the HLO-visible FLOPs drop ~2x for causal).
+
+MXU alignment: bq/bk default to 128 and D is the head dim (power of two in
+every assigned config) so the two dots per block are 128x128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, bq: int, bk: int, nk: int,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+    q_start = iq * bq
+    k_start = ik * bk
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- block-level visibility (static grid, dynamic skip) ---
+    visible = jnp.bool_(True)
+    if causal:
+        visible &= k_start <= q_start + bq - 1
+    if window > 0:
+        visible &= k_start + bk - 1 > q_start - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        if causal or window > 0:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+            if causal:
+                mask &= ki <= qi
+            if window > 0:
+                mask &= ki > qi - window
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q, k, v, *, causal=True, window=0, block_q=128, block_k=128, interpret=False
+):
+    """q [B,H,Sq,D], k/v [B,KVH,Sk,D] -> out [B,H,Sq,D]."""
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    G = H // KVH
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        scale=D**-0.5, causal=causal, window=window, bq=bq, bk=bk, nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Pallas TPU fused RMSNorm kernel (bandwidth-bound epilogue/prologue norm).
+
+Rows are tiled over the grid; each block is [rows, D] in VMEM with the weight
+broadcast block-resident.  One HBM read + one write per element (the fusion
+XLA sometimes misses when the norm sits between remat boundaries).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_kernel", "rmsnorm_call"]
+
+
+def rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_call(x, w, *, eps=1e-5, block_rows=256, interpret=False):
+    """x [..., D], w [D] -> normalized x, fp32 accumulation."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    br = min(block_rows, R)
+    # pick the largest divisor of R <= block_rows
+    while R % br:
+        br -= 1
+    grid = (R // br,)
+    out = pl.pallas_call(
+        functools.partial(rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    return out.reshape(orig_shape)

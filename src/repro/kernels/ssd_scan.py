@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (arXiv:2405.21060).
+
+Per head the SSD recurrence  s_t = a_t s_{t-1} + (dt_t x_t) B_t^T,
+y_t = s_t C_t + D x_t  is evaluated in the block-decomposed (dual) form:
+quadratic *within* a chunk of L steps — three MXU-shaped matmuls — plus a
+rank-1-per-step chunk-state recurrence carried across chunks.
+
+Grid ``(B, H, n_chunks)`` with the chunk dimension innermost/sequential; the
+inter-chunk state [P, N] lives in VMEM scratch and persists across chunk
+steps (re-initialised at chunk 0 of each (batch, head)).  B/C are stored
+grouped ([B, S, G, N], Mamba-2 ngroups) — the index map picks the head's
+group, so they are never repeated across heads in HBM.
+
+VMEM per step: L*(P+2N) inputs + L*L scores + P*N state — with the default
+L=chunk=64, P=64, N=128 that's ~100 KiB, comfortably inside the ~16 MiB VMEM
+budget; L and the (P, N) tile are the §Perf knobs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel", "ssd_scan_call"]
+
+
+def ssd_scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, s_scr, *, L: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)       # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # [L]
+    a = a_ref[0].astype(jnp.float32)             # scalar A_h (negative)
+    bmat = b_ref[0, :, 0].astype(jnp.float32)    # [L, N]
+    cmat = c_ref[0, :, 0].astype(jnp.float32)    # [L, N]
+    dcoef = d_ref[0].astype(jnp.float32)         # scalar D_h
+
+    logd = dt * a                                 # [L] log-decay per step
+    cum = jnp.cumsum(logd)                        # [L] decay from chunk start (incl.)
+    xbar = x * dt[:, None]                        # [L, P]
+
+    # --- intra-chunk: y_l += sum_{s<=l} C_l·B_s * exp(cum_l - cum_s) * xbar_s
+    seg = cum[:, None] - cum[None, :]             # [L, L]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dec = jnp.where(si <= li, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # [L, L]
+    y = jax.lax.dot_general(
+        scores * dec, xbar, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # [L, P]
+
+    # --- inter-chunk: carried state s [P, N] emits through C with in-chunk decay
+    state = s_scr[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # --- state update: s' = s * exp(total) + sum_l exp(total - cum_l) xbar_l B_l^T
+    total = cum[-1]
+    w = jnp.exp(total - cum)                      # [L]
+    s_scr[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        xbar * w[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0, :, 0] = (y + x * dcoef).astype(y_ref.dtype)
+
+
+def ssd_scan_call(x, dt, A, B, C, D, *, chunk=64, interpret=False):
+    """x [b,s,h,p], dt [b,s,h] (post-softplus), A [h] (negative), B/C [b,s,g,n],
+    D [h] -> y [b,s,h,p]."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    hpg = h // g  # heads per group
+    grid = (b, h, nc)
+
+    kernel = functools.partial(ssd_scan_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, L, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, L, 1, n), lambda ib, ih, ic: (ib, ic, ih // hpg, 0)),
+            pl.BlockSpec((1, L, 1, n), lambda ib, ih, ic: (ib, ic, ih // hpg, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+        ],
+        out_specs=pl.BlockSpec((1, L, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)

@@ -1,0 +1,1 @@
+"""Launcher layer: production meshes, dry-run, train/serve drivers."""

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, capture memory/cost/collective analysis.
+
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out-dir bench_out/dryrun
+
+Per cell this runs::
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(*input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+and records the result JSON for benchmarks/roofline.py.  Sharding failures /
+compile OOMs here are bugs in the framework, not in the harness.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import SHAPES, ShardingPolicy, TrainConfig, get_arch
+from repro.launch.hlo import parse_collectives, parse_dot_flops
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.specs import all_cells, build_cell, cell_skip_reason
+from repro.models.flops import param_counts, train_flops_per_token, decode_flops_per_token
+
+ARCH_ORDER = [
+    "phi4-mini-3.8b", "llama3.2-3b", "mistral-large-123b", "minitron-8b",
+    "paligemma-3b", "mamba2-2.7b", "deepseek-v2-lite-16b", "kimi-k2-1t-a32b",
+    "hymba-1.5b", "musicgen-medium",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS for the roofline: 6·N·D train (N_active for MoE),
+    2·N_active per decoded token + attention reads."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return train_flops_per_token(cfg, S) * B * S
+    if shape.kind == "prefill":
+        return train_flops_per_token(cfg, S) / 3.0 * B * S  # fwd only
+    return decode_flops_per_token(cfg, S) * B  # one token per stream
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, policy=None, tcfg=None,
+             verbose=True):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if policy is None:
+        # single-pod: UNROLLED layers — XLA's HloCostAnalysis visits while
+        # bodies once, so scanned programs undercount FLOPs/bytes/collectives
+        # by ~num_layers; unrolling makes the §Roofline numbers exact.
+        # multi-pod: scanned — the compile/fit proof, same program production
+        # runs (compact HLO, fast compile).
+        policy = ShardingPolicy(scan_layers=multi_pod)
+    tcfg = tcfg or TrainConfig()
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
+           "kind": shape.kind, "policy": {k: str(v) for k, v in vars(policy).items()}}
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skip", skip_reason=reason)
+        return rec
+    try:
+        from repro.models.layers import activate_mesh
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        cell = build_cell(mesh, cfg, shape, policy, tcfg)
+        t0 = time.time()
+        # activate_mesh makes the model's internal constrain() calls emit
+        # with_sharding_constraint — the designed sharding strategy.  Without
+        # it GSPMD auto-propagates from the argument shardings alone
+        # (measurably worse: see §Perf 'gspmd-auto' rows).
+        with mesh, activate_mesh(mesh):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        per_op, tot = parse_collectives(hlo, total_devices=n_dev)
+        dot_total, dot_top = parse_dot_flops(hlo, top=10)
+        pc = param_counts(cfg)
+        mf = model_flops(cfg, shape)
+        rec.update(
+            devices=n_dev,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            # MXU matmul FLOPs from the dot census — the TPU compute term.
+            # cost_analysis 'flops' additionally counts elementwise work and
+            # the XLA-CPU bf16->f32 convert artifacts (kept as flops_xla).
+            flops_per_device=float(dot_total),
+            flops_xla_per_device=float(cost.get("flops", -1.0)),
+            dot_top=[{"flops": f, "shape": s, "op": n} for f, s, n in dot_top],
+            bytes_accessed_per_device=float(cost.get("bytes accessed", -1.0)),
+            memory={
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            collectives={
+                op: dataclasses_dict(st) for op, st in sorted(per_op.items())
+            },
+            collective_operand_bytes=int(tot.operand_bytes),
+            collective_result_bytes=int(tot.result_bytes),
+            collective_wire_bytes=float(tot.wire_bytes),
+            collective_count=int(tot.count),
+            params_total=int(pc.total),
+            params_active=int(pc.active),
+            model_flops=float(mf),
+            hlo_bytes=len(hlo),
+        )
+        # --- roofline terms (single-pod constants; DESIGN.md §4) ---
+        chips = n_dev
+        t_compute = rec["flops_per_device"] / HW.PEAK_FLOPS_BF16
+        t_memory = rec["bytes_accessed_per_device"] / HW.HBM_BW
+        t_coll = rec["collective_wire_bytes"] / HW.ICI_LINK_BW
+        rec["roofline"] = {
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_coll,
+            "bottleneck": max(
+                (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+                key=lambda kv: kv[1],
+            )[0],
+            "model_flops_ratio": (
+                mf / (rec["flops_per_device"] * chips)
+                if rec["flops_per_device"] > 0 else None
+            ),
+        }
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] compile={rec['compile_s']}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_accessed_per_device']:.3e} "
+                  f"coll_wire={rec['collective_wire_bytes']:.3e}B "
+                  f"bottleneck={rec['roofline']['bottleneck']}")
+            print("  memory_analysis:", rec["memory"])
+    except Exception as e:  # a failure here is a framework bug — record it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: {rec['error']}")
+    return rec
+
+
+def dataclasses_dict(st):
+    return {"count": st.count, "operand_bytes": int(st.operand_bytes),
+            "result_bytes": int(st.result_bytes), "wire_bytes": float(st.wire_bytes)}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every (arch × shape)")
+    ap.add_argument("--out-dir", default="bench_out/dryrun")
+    ap.add_argument("--policy-json", default=None,
+                    help="ShardingPolicy field overrides as JSON (perf hillclimb)")
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    args = ap.parse_args()
+
+    policy = None  # run_cell default: single-pod unrolled, multi-pod scanned
+    if args.policy_json:
+        import dataclasses as dc
+        policy = dc.replace(ShardingPolicy(), **json.loads(args.policy_json))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCH_ORDER for s in SHAPE_ORDER]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_err = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, policy=policy)
+            n_err += rec["status"] == "error"
+            tag = ("_" + args.tag) if args.tag else ""
+            fn = f"{args.out_dir}/{arch}_{shape}_{'multi' if mp else 'single'}{tag}.json"
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"done; {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

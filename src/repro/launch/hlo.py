@@ -1,0 +1,223 @@
+"""Post-optimization HLO text analysis: collective inventory + byte counts.
+
+``compiled.cost_analysis()`` gives FLOPs/bytes but NOT collective traffic, so
+we parse ``compiled.as_text()`` (the post-SPMD per-device module): every
+instruction definition ``%name = dtype[dims]{layout} op(...)`` is indexed, and
+for each collective op we resolve its operand names to their defining shapes
+and record operand/result bytes plus the participant-group size.
+
+Two aggregate numbers come out:
+  * ``operand_bytes`` — the literal sum of collective operand sizes (the
+    §Roofline formula's collective_bytes);
+  * ``wire_bytes``   — a ring-model estimate of bytes actually serialized per
+    device on the slowest link (all-reduce 2(n-1)/n, all-gather (n-1)/n of
+    the *result*, reduce-scatter (n-1)/n of the operand, all-to-all (n-1)/n,
+    collective-permute 1x) — what the collective roofline term should use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+__all__ = ["CollectiveStats", "parse_collectives", "parse_dot_flops", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] literal in ``text`` (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    operand_bytes: int = 0
+    result_bytes: int = 0
+    wire_bytes: float = 0.0
+
+
+def _dims_of(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in DTYPE_BYTES:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def parse_dot_flops(hlo_text: str, top: int = 15):
+    """Per-dot FLOP census of a compiled module: FLOPs = 2 * prod(result dims)
+    * prod(lhs contracting dims).  Returns (total_flops, top-k list of
+    (flops, result_shape, metadata-op_name)).  Used by the §Perf loop to find
+    where compiled compute diverges from MODEL_FLOPS."""
+    shapes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            paren = m.group(2).find("(")
+            head = m.group(2)[:paren] if paren > 0 else m.group(2)
+            shapes[m.group(1).lstrip("%")] = head
+    total = 0.0
+    entries = []
+    for line in hlo_text.splitlines():
+        if " dot(" not in line:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        res_dims = _dims_of(rhs[: rhs.find("(")])
+        if res_dims is None:
+            continue
+        # first operand's shape (inline or by reference); the scan must respect
+        # brackets — shape literals contain commas (f32[4,128,256])
+        args = rhs[rhs.find("(") + 1 :]
+        depth = 0
+        lhs_tok = ""
+        for ch in args:
+            if ch in "[{(":
+                depth += 1
+            elif ch in "]})":
+                if ch == ")" and depth == 0:
+                    break
+                depth -= 1
+            elif ch == "," and depth == 0:
+                break
+            lhs_tok += ch
+        lhs_tok = lhs_tok.strip()
+        lhs_head = lhs_tok if _SHAPE_RE.search(lhs_tok.split("%")[0]) else shapes.get(
+            lhs_tok.lstrip("%").split(" ")[0], "")
+        lhs_dims = _dims_of(lhs_head) or []
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        contract = 1
+        if mc and mc.group(1):
+            for d in mc.group(1).split(","):
+                if int(d) < len(lhs_dims):
+                    contract *= lhs_dims[int(d)]
+        fl = 2.0 * math.prod(res_dims) * contract
+        total += fl
+        meta = re.search(r'op_name="([^"]*)"', line)
+        entries.append((fl, rhs[: rhs.find("(")].strip(),
+                        meta.group(1)[-90:] if meta else ""))
+    entries.sort(key=lambda e: -e[0])
+    # aggregate identical (shape, op_name) entries
+    from collections import Counter
+    agg = Counter()
+    for fl, shape, name in entries:
+        agg[(shape, name)] += fl
+    top_list = sorted(((fl, s, n) for (s, n), fl in agg.items()), key=lambda e: -e[0])[:top]
+    return total, top_list
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    r = (n - 1) / n
+    return {"all-reduce": 2 * r, "all-gather": r, "reduce-scatter": r,
+            "all-to-all": r, "collective-permute": 1.0,
+            "collective-broadcast": 1.0}.get(op, r)
+
+
+def parse_collectives(hlo_text: str, total_devices: int = 1):
+    """-> (per-op dict[str, CollectiveStats], totals CollectiveStats)."""
+    # pass 1: instruction shapes
+    shapes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren > 0 else rhs
+        shapes[name.lstrip("%")] = _shape_bytes(head)
+
+    per_op: dict = defaultdict(CollectiveStats)
+    total = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = re.search(r"\b(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if "-done(" in rhs:
+            continue  # count the -start, skip its completion marker
+        head = rhs[: rhs.find("(")]
+        result_b = _shape_bytes(head)
+        # resolve operand names
+        args = rhs[rhs.find("(") + 1 :]
+        depth, buf, names = 1, "", []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                names.append(buf.strip())
+                buf = ""
+            else:
+                buf += ch
+        if buf.strip():
+            names.append(buf.strip())
+        operand_b = 0
+        for nm in names:
+            nm = nm.strip()
+            inline = _shape_bytes(nm.split("%")[0])  # "bf16[..] %name" form
+            if inline:
+                operand_b += inline
+                continue
+            nm = nm.lstrip("%").split(" ")[0]
+            operand_b += shapes.get(nm, 0)
+        n = _group_size(line, total_devices)
+        wf = _wire_factor(op, n)
+        base = result_b if op == "all-gather" else operand_b
+        st = per_op[op]
+        st.count += 1
+        st.operand_bytes += operand_b
+        st.result_bytes += result_b
+        st.wire_bytes += wf * base
+        total.count += 1
+        total.operand_bytes += operand_b
+        total.result_bytes += result_b
+        total.wire_bytes += wf * base
+    return dict(per_op), total

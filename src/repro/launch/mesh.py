@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state, so smoke tests keep seeing 1 CPU device while the dry-run
+process (which sets ``--xla_force_host_platform_device_count=512`` before any
+jax import) can build both production meshes.
+
+Mesh shapes (TPU v5e pods):
+  single-pod:  (data=16, model=16)          = 256 chips
+  multi-pod:   (pod=2, data=16, model=16)   = 512 chips
+The 'pod' axis is the paper's linear chain axis (DCN-connected); 'data' is
+batch/FSDP; 'model' is TP/sequence/expert-FF sharding (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_chain_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False, devices=None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run only)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_chain_mesh(n_stages: int, devices=None):
+    """Linear chain mesh for the DLT runner (stage axis only)."""
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n_stages:
+        raise RuntimeError(f"chain of {n_stages} needs {n_stages} devices, found {len(devices)}")
+    return jax.make_mesh((n_stages,), ("stage",), devices=devices[:n_stages])
+
+
+class HW:
+    """TPU v5e roofline constants (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # B/s
+    ICI_LINK_BW = 50e9  # B/s per link
+    HBM_BYTES = 16e9  # capacity
+    DCN_BW = 25e9  # B/s per pod egress (pod axis hops)
+    VMEM_BYTES = 128 * 2**20

@@ -1,0 +1,201 @@
+"""Dry-run cell construction: (arch × shape × mesh) -> (step_fn, abstract
+inputs, shardings).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation; the FULL configs are only
+ever touched through these.  ``build_cell`` wires the step function
+(train_step / prefill / serve_step per the shape's kind) to its sharding
+trees for ``jax.jit(...).lower(...)``.
+
+Cell skip policy (DESIGN.md §Shape-cell skips): ``long_500k`` runs only for
+sub-quadratic archs (ssm / hybrid-with-SWA); dense-attention archs get a
+recorded SKIP (a 500k dense KV cache is not deployable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig, ShardingPolicy, TrainConfig, SHAPES, get_arch
+from repro.models import cache_shapes, init_cache, init_params, loss_fn, prefill, param_shapes
+from repro.models.layers import fix_spec
+from repro.runtime import make_serve_step, make_train_state, make_train_step
+from repro.runtime.sharding import batch_specs, cache_specs, named, param_specs
+
+__all__ = ["Cell", "input_specs", "build_cell", "cell_skip_reason", "all_cells"]
+
+DP = ("pod", "data")
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    kind: str  # train | prefill | decode
+    fn: Callable  # to be jitted
+    args: tuple  # abstract args (ShapeDtypeStruct trees)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+
+
+def cell_skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "long_500k needs sub-quadratic attention / bounded decode state; "
+            f"{cfg.name} is full-attention (dense 500k KV cache undeployable)"
+        )
+    return None
+
+
+def _token_specs(cfg: ArchConfig, batch: int, seq: int, kind: str):
+    """ShapeDtypeStructs for one batch of model inputs."""
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            toks = jax.ShapeDtypeStruct((batch, seq, cfg.num_codebooks), i32)
+        elif cfg.family == "vlm":
+            toks = jax.ShapeDtypeStruct((batch, seq - cfg.num_patches), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((batch, seq), i32)
+        out = {"tokens": toks}
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.num_patches, cfg.patch_dim), jnp.float32
+            )
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct(toks.shape, i32)
+        return out
+    # decode: one new token against a cache of seq_len
+    if cfg.family == "audio":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1, cfg.num_codebooks), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+
+
+def input_specs(arch: str | ArchConfig, shape: str | ShapeConfig,
+                policy: ShardingPolicy | None = None,
+                tcfg: TrainConfig | None = None,
+                param_dtype=jnp.bfloat16):
+    """Abstract (no-allocation) input trees for one (arch, shape) cell.
+
+    train  -> {state, batch}
+    prefill-> {params, batch}
+    decode -> {params, cache, batch, cache_len}
+    """
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shp = SHAPES[shape] if isinstance(shape, str) else shape
+    policy = policy or ShardingPolicy()
+    tcfg = tcfg or TrainConfig()
+    B, S = shp.global_batch, shp.seq_len
+    kind = shp.kind
+    batch = _token_specs(cfg, B, S, kind)
+    params = param_shapes(cfg, policy, dtype=param_dtype)
+    if kind == "train":
+        state = jax.eval_shape(lambda: make_train_state(
+            init_params(cfg, policy, 0, param_dtype), tcfg))
+        return {"state": state, "batch": batch}
+    if kind == "prefill":
+        return {"params": params, "batch": batch}
+    cache = cache_shapes(cfg, B, S, dtype=param_dtype, kv_dtype=policy.kv_cache_dtype)
+    return {
+        "params": params,
+        "cache": cache,
+        "batch": batch,
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _batch_shardings(mesh, cfg: ArchConfig, kind: str, batch_size: int, policy):
+    spec = batch_specs(cfg, policy, batch_size=batch_size)
+    if kind == "prefill":
+        spec.pop("labels", None)
+    if kind == "decode":
+        dp = DP if batch_size > 1 else None
+        spec = {"tokens": P(dp, None) if cfg.family != "audio" else P(dp, None, None)}
+    return named(mesh, spec)
+
+
+def build_cell(mesh, arch: str | ArchConfig, shape: str | ShapeConfig,
+               policy: ShardingPolicy | None = None,
+               tcfg: TrainConfig | None = None,
+               param_dtype=jnp.bfloat16) -> Cell:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shp = SHAPES[shape] if isinstance(shape, str) else shape
+    policy = policy or ShardingPolicy()
+    tcfg = tcfg or TrainConfig()
+    reason = cell_skip_reason(cfg, shp)
+    if reason:
+        raise ValueError(f"skipped cell: {reason}")
+    specs = input_specs(cfg, shp, policy, tcfg, param_dtype)
+    kind = shp.kind
+    rep = NamedSharding(mesh, P())
+
+    if kind == "train":
+        p_sh = named(mesh, param_specs(specs["state"].params, policy))
+        state_sh = jax.tree.map(
+            lambda _: None, specs["state"],
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        import repro.runtime.train as rt
+
+        state_sh = rt.TrainState(
+            params=p_sh,
+            opt=type(specs["state"].opt)(step=rep, m=p_sh, v=p_sh),
+        )
+        b_sh = _batch_shardings(mesh, cfg, kind, shp.global_batch, policy)
+        fn = make_train_step(cfg, policy, tcfg)
+        return Cell(cfg, shp, kind, fn, (specs["state"], specs["batch"]),
+                    (state_sh, b_sh), (state_sh, None), donate_argnums=(0,))
+
+    p_sh = named(mesh, param_specs(specs["params"], policy))
+
+    if kind == "prefill":
+        b_sh = _batch_shardings(mesh, cfg, kind, shp.global_batch, policy)
+
+        def prefill_fn(params, batch):
+            logits, cache, n = prefill(
+                params, cfg, policy, batch["tokens"], batch.get("patches"),
+                max_len=shp.seq_len,
+            )
+            if policy.prefill_last_logit_only:
+                logits = logits[:, -1:]  # sampling needs only the last position
+            return logits, cache
+
+        mdiv = mesh.shape[policy.model_axis]
+        c_sh = named(mesh, cache_specs(cfg, policy, batch_size=shp.global_batch,
+                                       model_divisor=mdiv))
+        return Cell(cfg, shp, kind, prefill_fn, (specs["params"], specs["batch"]),
+                    (p_sh, b_sh), (None, c_sh), donate_argnums=())
+
+    # decode
+    mdiv = mesh.shape[policy.model_axis]
+    c_sh = named(mesh, cache_specs(cfg, policy, batch_size=shp.global_batch,
+                                   model_divisor=mdiv))
+    b_sh = _batch_shardings(mesh, cfg, kind, shp.global_batch, policy)
+    serve = make_serve_step(cfg, policy)
+
+    def serve_fn(params, cache, batch, cache_len):
+        return serve(params, cache, batch["tokens"], cache_len)
+
+    return Cell(cfg, shp, kind, serve_fn,
+                (specs["params"], specs["cache"], specs["batch"], specs["cache_len"]),
+                (p_sh, c_sh, b_sh, rep), (None, c_sh), donate_argnums=(1,))
+
+
+def all_cells():
+    """Every assigned (arch, shape) pair, with skip markers."""
+    from repro.config import list_archs
+
+    out = []
+    for a in list_archs():
+        if a.endswith("-smoke"):
+            continue
+        cfg = get_arch(a)
+        for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            out.append((a, s, cell_skip_reason(cfg, SHAPES[s])))
+    return out

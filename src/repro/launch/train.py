@@ -1,0 +1,244 @@
+"""Training driver.
+
+Two execution modes:
+
+  standard   — pjit/DP+TP train step on whatever mesh the process sees
+               (on TPU: the production mesh; on CPU: a 1-device mesh with the
+               smoke config — same code path end to end);
+  dlt-chain  — the paper's platform: devices form a linear chain, the DLT
+               planner (LP of Fig. 6) schedules batch installments down the
+               chain, executed with shard_map + ppermute (dlt_runner), with
+               checkpoint/restart + failure recovery + straggler replanning.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke --steps 20
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+      python -m repro.launch.train --arch llama3.2-3b --smoke --steps 12 \\
+      --dlt-chain 4 --fail "2@step6" --straggle "1@step3x2"
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.config import ShardingPolicy, TrainConfig, get_arch, smoke_variant
+from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
+from repro.data import SyntheticStream, batch_load_spec, make_batch
+from repro.models import init_params, param_counts
+from repro.models.layers import activate_mesh
+from repro.runtime import make_train_state, make_train_step
+from repro.runtime.dlt_runner import make_dlt_train_step, stage_batches
+from repro.runtime.ft import FailureEvent, FailureSim, RecoveringChain, StragglerSim
+from repro.runtime.sharding import batch_specs, named, param_specs
+from repro.launch.mesh import HW, make_chain_mesh
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    # --- DLT chain mode ---
+    ap.add_argument("--dlt-chain", type=int, default=0,
+                    help="run the paper's chain runner over N stages")
+    ap.add_argument("--dlt-q", type=int, default=1, help="installments per load")
+    ap.add_argument("--dlt-loads", type=int, default=2, help="loads per super-step")
+    ap.add_argument("--fail", default=None, help="inject failure: STAGE@stepK")
+    ap.add_argument("--straggle", default=None, help="STAGE@stepKxSLOW")
+    ap.add_argument("--metrics-out", default=None)
+    return ap.parse_args(argv)
+
+
+def build_cfg(args):
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    policy = ShardingPolicy(attention_impl="chunked", attn_chunk=min(1024, args.seq))
+    tcfg = TrainConfig(lr=args.lr, warmup_steps=min(10, args.steps // 10),
+                       total_steps=args.steps, microbatches=args.microbatches,
+                       seed=args.seed)
+    return cfg, policy, tcfg
+
+
+def run_standard(args, cfg, policy, tcfg):
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model")) if n > 1 else None
+    params = init_params(cfg, policy, seed=args.seed, dtype=jnp.float32)
+    state = make_train_state(params, tcfg)
+    step_fn = make_train_step(cfg, policy, tcfg)
+    if mesh is not None:
+        p_sh = named(mesh, param_specs(jax.eval_shape(lambda: params), policy))
+        import repro.runtime.train as rt
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        st_sh = rt.TrainState(params=p_sh, opt=type(state.opt)(
+            step=NamedSharding(mesh, P()), m=p_sh, v=p_sh))
+        b_sh = named(mesh, batch_specs(cfg, policy))
+        step_fn = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                          out_shardings=(st_sh, None), donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if args.resume and args.ckpt_dir and (ls := latest_step(args.ckpt_dir)) is not None:
+        state, _ = restore_checkpoint(args.ckpt_dir, ls, state)
+        start = ls + 1
+        print(f"resumed from step {ls}")
+    stream = SyntheticStream(cfg, args.batch, args.seq, seed=args.seed, step=start)
+    metrics_log = []
+    ctx = activate_mesh(mesh) if mesh is not None else _null_ctx()
+    with ctx:
+        for step in range(start, args.steps):
+            batch = jax.tree.map(jnp.asarray, next(stream))
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+            metrics_log.append({"step": step, "loss": loss, "time_s": dt})
+            if mgr and (step + 1) % args.save_every == 0:
+                mgr.save_async(step, state)
+    if mgr:
+        mgr.wait()
+    return metrics_log
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null_ctx():
+    yield None
+
+
+def _nominal_stage_speed(cfg) -> float:
+    """Per-stage effective FLOP/s (CPU pretends to be a pod; value only sets
+    the relative w_i scale the planner reasons about)."""
+    return 256 * HW.PEAK_FLOPS_BF16 * 0.4  # pod MFU guess; updated online
+
+
+def run_dlt_chain(args, cfg, policy, tcfg):
+    m = args.dlt_chain
+    if len(jax.devices()) < m:
+        raise SystemExit(
+            f"--dlt-chain {m} needs {m} devices; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={m}")
+    mesh = make_chain_mesh(m)
+    # --- chain description, scaled to the workload so the LP is non-trivial:
+    # a batch ~50ms of compute per stage, a batch transfer ~15ms; stages
+    # heterogeneous on purpose (stage i speed ~ 1/(1+0.2i)) ---
+    load0 = batch_load_spec(cfg, args.batch, args.seq)
+    base_speed = load0.flops_per_sample * load0.num_samples / 0.05
+    base_bw = load0.bytes_per_sample * load0.num_samples / 0.015
+    stages = [StageSpec(f"pod{i}", base_speed / (1 + 0.2 * i)) for i in range(m)]
+    links = [LinkSpec(bytes_per_sec=base_bw, startup_sec=50e-6) for _ in range(m - 1)]
+    planner = Planner(stages, links)
+    loads = [batch_load_spec(cfg, args.batch, args.seq) for _ in range(args.dlt_loads)]
+    chain = RecoveringChain(planner, loads, q=args.dlt_q)
+    print(f"chain plan: makespan={chain.plan.makespan:.4f}s cells={chain.plan.cells} "
+          f"samples={[list(map(int, s)) for s in chain.plan.samples]}")
+
+    failure = None
+    if args.fail:
+        g = re.match(r"(\d+)@step(\d+)", args.fail)
+        failure = FailureSim([FailureEvent(step=int(g.group(2)), stage=int(g.group(1)),
+                                           restore_delay=1.0)])
+    straggler = None
+    if args.straggle:
+        g = re.match(r"(\d+)@step(\d+)x([\d.]+)", args.straggle)
+        straggler = StragglerSim(int(g.group(1)), int(g.group(2)), float(g.group(3)))
+
+    params = init_params(cfg, policy, seed=args.seed, dtype=jnp.float32)
+    state = make_train_state(params, tcfg)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    def build_step(mesh_, plan):
+        return make_dlt_train_step(cfg, policy, tcfg, mesh_, n_cells=len(plan.cells))
+
+    step_fn = build_step(mesh, chain.plan)
+    metrics_log = []
+    step = 0
+    data_step = 0
+    while step < args.steps:
+        # one super-step = dlt_loads global batches scheduled down the chain
+        batches = [make_batch(cfg, args.batch, args.seq, data_step + i, seed=args.seed)
+                   for i in range(args.dlt_loads)]
+        toks, labs, counts = stage_batches(chain.plan, batches, chain.n_stages)
+        state, metrics = step_fn(state, jnp.asarray(toks), jnp.asarray(labs),
+                                 jnp.asarray(counts))
+        loss = float(metrics["loss"])
+        metrics_log.append({"step": step, "loss": loss, "stages": chain.n_stages,
+                            "makespan": chain.plan.makespan})
+        print(f"step {step:4d} loss {loss:.4f} chain={chain.n_stages} "
+              f"plan_makespan={chain.plan.makespan:.4f}s")
+        if mgr and (step + 1) % args.save_every == 0:
+            mgr.save_async(step, state)
+            mgr.wait()
+        data_step += args.dlt_loads
+        step += 1
+
+        # --- straggler feedback (simulated wall-times -> w_i EWMA -> replan) ---
+        if straggler is not None:
+            for i in range(chain.n_stages):
+                eff = straggler.effective_speed(i, base_speed / (1 + 0.2 * i), step)
+                if chain.on_observation(i, eff):
+                    print(f"  straggler replan (stage {i}): "
+                          f"makespan={chain.plan.makespan:.4f}s "
+                          f"samples={[list(map(int, x)) for x in chain.plan.samples]}")
+
+        # --- failure injection -> shrink chain, restore, rebuild step ---
+        if failure is not None and (ev := failure.check(step)):
+            print(f"  FAILURE stage {ev.stage} at step {step}: replanning")
+            chain.on_failure(ev)
+            mesh = make_chain_mesh(chain.n_stages)
+            step_fn = build_step(mesh, chain.plan)
+            if mgr and (ls := latest_step(args.ckpt_dir)) is not None:
+                state, _ = restore_checkpoint(args.ckpt_dir, ls, state)
+                print(f"  restored checkpoint step {ls}; "
+                      f"new chain={chain.stage_names()} "
+                      f"makespan={chain.plan.makespan:.4f}s")
+    if mgr:
+        mgr.wait()
+    return metrics_log
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    cfg, policy, tcfg = build_cfg(args)
+    pc = param_counts(cfg)
+    print(f"arch={cfg.name} params={pc.total/1e6:.1f}M active={pc.active/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+    if args.dlt_chain:
+        log = run_dlt_chain(args, cfg, policy, tcfg)
+    else:
+        log = run_standard(args, cfg, policy, tcfg)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(log, f, indent=1)
+    losses = [m["loss"] for m in log]
+    print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Model zoo substrate: layers, attention, SSM, MLA, MoE, generic decoder."""
+
+from .flops import decode_flops_per_token, param_counts, train_flops_per_token
+from .layers import activate_mesh, constrain, current_mesh, cross_entropy, fix_spec
+from .transformer import (
+    cache_shapes,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "activate_mesh",
+    "constrain",
+    "current_mesh",
+    "cross_entropy",
+    "fix_spec",
+    "init_params",
+    "param_shapes",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "cache_shapes",
+    "prefill",
+    "decode_step",
+    "param_counts",
+    "train_flops_per_token",
+    "decode_flops_per_token",
+]

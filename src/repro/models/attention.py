@@ -1,0 +1,203 @@
+"""Attention implementations: naive oracle, chunked online-softmax (the XLA
+"flash" used for big shapes), sliding-window, and split-KV decode.
+
+Selectable via ShardingPolicy.attention_impl:
+  "naive"   — materializes [B, H, Sq, Sk] scores; the correctness oracle and
+              the §Perf *baseline* for small shapes.
+  "chunked" — q-chunk × kv-chunk online softmax via lax.scan: O(S·chunk)
+              memory; `swa_skip`/causal block skipping halves (or better) the
+              FLOPs for masked blocks when `block_skip=True` (unrolled).
+  "pallas"  — the Pallas flash kernel (repro.kernels), TPU target.
+
+All functions take q [B,Sq,H,D], k/v [B,Skv,KVH,D] with GQA broadcasting done
+group-wise (never materializing repeated K/V).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import constrain
+
+__all__ = ["attention", "decode_attention", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,H,D], k [B,Sk,KVH,D] -> scores [B,KVH,G,Sq,Sk] fp32."""
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    return s * (D**-0.5)
+
+
+def _gqa_out(p, v):
+    """p [B,KVH,G,Sq,Sk] fp32, v [B,Sk,KVH,D] -> out [B,Sq,H,D]."""
+    B, KVH, G, Sq, Sk = p.shape
+    D = v.shape[-1]
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, KVH * G, D)
+
+
+def _mask(sq, sk, q_off, k_off, causal: bool, window: int):
+    qi = q_off + jnp.arange(sq)[:, None]
+    ki = k_off + jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        m &= ki <= qi
+    if window > 0:
+        m &= ki > qi - window
+    return m
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_off=0, k_off=0):
+    s = _gqa_scores(q, k)
+    m = _mask(q.shape[1], k.shape[1], q_off, k_off, causal, window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal=True,
+    window=0,
+    q_chunk=1024,
+    kv_chunk=1024,
+    block_skip=True,
+):
+    """Online-softmax attention, O(q_chunk * kv_chunk) score memory.
+
+    ``block_skip``: statically skip fully-masked kv blocks (upper triangle for
+    causal; out-of-window bands for SWA).  Skipping changes HLO size (python
+    loop) but cuts matmul FLOPs ~2x for causal, more for SWA.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KVH = k.shape[2]
+    G = H // KVH
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    scale = D**-0.5
+    kr = k.reshape(B, nk, kv_chunk, KVH, D)
+    vr = v.reshape(B, nk, kv_chunk, KVH, D)
+
+    def update(carry, qc, q_off, kc, vc, k_off):
+        m_run, l_run, acc = carry
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc, preferred_element_type=jnp.float32) * scale
+        msk = _mask(q_chunk, kv_chunk, q_off, k_off, causal, window)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_run = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v.dtype), vc, preferred_element_type=jnp.float32
+        )
+        return m_new, l_run, acc
+
+    def init_carry():
+        return (
+            jnp.full((B, KVH, G, q_chunk), NEG_INF, dtype=jnp.float32),
+            jnp.zeros((B, KVH, G, q_chunk), dtype=jnp.float32),
+            jnp.zeros((B, KVH, G, q_chunk, D), dtype=jnp.float32),
+        )
+
+    def finish(carry):
+        m_run, l_run, acc = carry
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, D).astype(q.dtype)
+
+    if block_skip:
+        # statically skip fully-masked kv blocks (unrolled; bigger HLO,
+        # ~2x fewer matmul FLOPs for causal, O(window) work for SWA)
+        outs = []
+        for qi in range(nq):
+            q_off = qi * q_chunk
+            qc = q[:, q_off : q_off + q_chunk].reshape(B, q_chunk, KVH, G, D)
+            lo, hi = 0, nk
+            if causal:
+                hi = min(nk, (q_off + q_chunk + kv_chunk - 1) // kv_chunk)
+            if window > 0:
+                lo = max(0, (q_off - window) // kv_chunk)
+            carry = init_carry()
+            for ki in range(lo, hi):
+                carry = update(carry, qc, q_off, kr[:, ki], vr[:, ki], ki * kv_chunk)
+            outs.append(finish(carry))
+        return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+    # compact-HLO path: scan over q chunks, inner scan over kv chunks
+    def q_body(_, qi):
+        q_off = qi * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, q_off, q_chunk, axis=1)
+        qc = qc.reshape(B, q_chunk, KVH, G, D)
+
+        def kv_body(carry, ki):
+            return update(carry, qc, q_off, kr[:, ki], vr[:, ki], ki * kv_chunk), None
+
+        carry, _ = jax.lax.scan(kv_body, init_carry(), jnp.arange(nk))
+        return None, finish(carry)
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(nq))  # [nq, B, qc, H, D]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+def attention(q, k, v, *, impl="chunked", causal=True, window=0, q_chunk=1024, kv_chunk=1024,
+              block_skip=True, model_axis="model", shard_seq=True):
+    """Dispatching wrapper with sequence-sharding constraints (DESIGN.md §4)."""
+    if shard_seq:
+        q = constrain(q, ("pod", "data"), model_axis, None, None)
+        k = constrain(k, ("pod", "data"), None, None, None)
+        v = constrain(v, ("pod", "data"), None, None, None)
+    if impl == "naive":
+        out = naive_attention(q, k, v, causal=causal, window=window)
+    elif impl == "chunked":
+        out = chunked_attention(
+            q, k, v, causal=causal, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            block_skip=block_skip,
+        )
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        raise ValueError(impl)
+    if shard_seq:
+        out = constrain(out, ("pod", "data"), model_axis, None, None)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, impl="chunked",
+                     model_axis="model", shard_seq=True):
+    """Single-token attention against a KV cache.
+
+    q [B,1,H,D]; caches [B,Smax,KVH,D]; ``cache_len`` scalar/int — number of
+    valid entries (positions >= cache_len are masked).  With ``shard_seq`` the
+    cache stays sequence-sharded over the model axis and XLA emits the
+    split-KV (flash-decoding) pattern: local partial softmax + tiny combine.
+    """
+    if shard_seq:
+        k_cache = constrain(k_cache, ("pod", "data"), model_axis, None, None)
+        v_cache = constrain(v_cache, ("pod", "data"), model_axis, None, None)
+    B, Smax, KVH, D = k_cache.shape
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.decode_attention(q, k_cache, v_cache, cache_len, window=window)
+    s = _gqa_scores(q, k_cache)  # [B,KVH,G,1,Smax]
+    idx = jnp.arange(Smax)
+    valid = idx < cache_len
+    if window > 0:
+        valid &= idx > cache_len - 1 - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache)

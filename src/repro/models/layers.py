@@ -1,0 +1,171 @@
+"""Shared model layers: norms, RoPE, gated MLPs, embeddings, sharding helper.
+
+Pure-JAX, functional: params are nested dicts of jnp arrays; every function
+takes (params, inputs) and returns outputs.  Sharding is expressed through
+``constrain`` which becomes a no-op outside a mesh context (CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "activate_mesh",
+    "current_mesh",
+    "constrain",
+    "fix_spec",
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "glu_mlp",
+    "init_glu_mlp",
+    "init_linear",
+    "linear",
+    "cross_entropy",
+    "Initializer",
+]
+
+_local = threading.local()
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh):
+    """Make ``constrain`` emit with_sharding_constraint against this mesh."""
+    prev = getattr(_local, "mesh", None)
+    _local.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _local.mesh = prev
+
+
+def current_mesh():
+    return getattr(_local, "mesh", None)
+
+
+def fix_spec(mesh, spec: P) -> P:
+    """Drop axis names absent from the mesh (e.g. 'pod' on a single pod)."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        sub = tuple(a for a in entry if a in names)
+        return sub if len(sub) > 1 else (sub[0] if sub else None)
+
+    return P(*(fix(e) for e in spec))
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint(x, P(*spec_entries)) under the active mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = fix_spec(mesh, P(*spec_entries))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+class Initializer:
+    """Seeded parameter factory with fan-in scaling."""
+
+    def __init__(self, seed: int, dtype=jnp.bfloat16):
+        self.key = jax.random.PRNGKey(seed)
+        self.dtype = dtype
+
+    def split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, scale=None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = (fan_in**-0.5) if scale is None else scale
+        return (jax.random.normal(self.split(), shape, dtype=jnp.float32) * scale).astype(self.dtype)
+
+    def zeros(self, shape, dtype=None):
+        return jnp.zeros(shape, dtype=dtype or self.dtype)
+
+    def ones(self, shape, dtype=None):
+        return jnp.ones(shape, dtype=dtype or self.dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope(positions, head_dim: int, theta: float):
+    """Rotary tables: positions [...] -> cos/sin [..., head_dim//2], fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin broadcastable [..., S, 1, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_linear(init: Initializer, d_in: int, d_out: int, scale=None):
+    return {"w": init.normal((d_in, d_out), scale=scale)}
+
+
+def linear(p, x):
+    return x @ p["w"]
+
+
+def init_glu_mlp(init: Initializer, d_model: int, d_ff: int):
+    return {
+        "w_gate": init.normal((d_model, d_ff)),
+        "w_up": init.normal((d_model, d_ff)),
+        "w_down": init.normal((d_ff, d_model)),
+    }
+
+
+def glu_mlp(p, x, act: str = "swiglu", model_axis: str = "model", out_spec=None):
+    """Gated MLP with Megatron TP on d_ff (sharding via constraints).
+
+    ``out_spec``: residual-stream spec for the down-projection output — under
+    sequence parallelism it is seq-sharded, which lets GSPMD fuse the
+    partial-sum all-reduce + scatter into a reduce-scatter.
+    """
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    g = constrain(g, ("pod", "data"), None, model_axis)
+    u = constrain(u, ("pod", "data"), None, model_axis)
+    if act == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif act == "geglu":
+        h = jax.nn.gelu(g) * u
+    else:
+        raise ValueError(act)
+    out = h @ p["w_down"]
+    return constrain(out, *(out_spec or (("pod", "data"), None, None)))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32; logits [..., V], labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill use the expanded form; the decode path uses the *absorbed* form
+against the compressed cache (c_kv [B,S,r] + k_rope [B,S,dr]) — the KV-cache
+compression that is MLA's reason to exist (r=512 vs H*(dn+dv)=4096 per token
+for V2-Lite).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from .attention import NEG_INF
+from .layers import Initializer, apply_rope, constrain, rope
+
+__all__ = ["init_mla", "mla_attention", "mla_decode_step", "init_mla_cache"]
+
+
+def init_mla(init: Initializer, cfg: ArchConfig):
+    m = cfg.mla
+    H = cfg.num_heads
+    dq = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_q": init.normal((cfg.d_model, H * dq)),
+        "w_dkv": init.normal((cfg.d_model, m.kv_lora_rank)),
+        "w_kr": init.normal((cfg.d_model, m.qk_rope_head_dim)),
+        "w_uk": init.normal((m.kv_lora_rank, H * m.qk_nope_head_dim)),
+        "w_uv": init.normal((m.kv_lora_rank, H * m.v_head_dim)),
+        "w_o": init.normal((H * m.v_head_dim, cfg.d_model)),
+    }
+
+
+def _project(p, x, cfg: ArchConfig, pos):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = (x @ p["w_q"]).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = jnp.split(q, [dn], axis=-1)
+    c_kv = x @ p["w_dkv"]  # [B,S,r] — the compressed latent (cacheable)
+    k_pe = (x @ p["w_kr"]).reshape(B, S, 1, dr)
+    cos, sin = rope(pos, dr, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos[:, :, None, : dr // 2], sin[:, :, None, : dr // 2])
+    k_pe = apply_rope(k_pe, cos[:, :, None, : dr // 2], sin[:, :, None, : dr // 2])
+    return q_nope, q_pe, c_kv, k_pe[:, :, 0]
+
+
+def mla_attention(p, x, cfg: ArchConfig, pos, causal=True):
+    """Expanded-form MLA for train/prefill.  Returns (out, cache_entries)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_pe, c_kv, k_pe = _project(p, x, cfg, pos)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, dn)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, dv)
+    scale = (dn + dr) ** -0.5
+    s = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bkd->bhqk", q_pe, k_pe, preferred_element_type=jnp.float32)
+    ) * scale
+    if causal:
+        msk = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(msk[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(v.dtype), v).reshape(B, S, H * dv)
+    out = o @ p["w_o"]
+    return constrain(out, ("pod", "data"), None, None), {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype=dtype),
+        "k_pe": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype=dtype),
+    }
+
+
+def mla_decode_step(p, x, cache, cache_len, cfg: ArchConfig, model_axis="model"):
+    """Absorbed-form single-token decode against the compressed cache.
+
+    scores_h(s) = q_nope_h^T W_uk_h c_s + q_pe_h^T k_pe_s
+                = (W_uk_h^T q_nope_h) . c_s + q_pe_h . k_pe_s
+    out_h       = W_uv_h^T (sum_s p_s c_s)
+
+    x [B,1,d]; cache c_kv [B,Smax,r], k_pe [B,Smax,dr].
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    q_nope, q_pe, c_new, k_pe_new = _project(p, x, cfg, pos)
+    # write the new token into the cache
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, cache_len, 0))
+    k_pe = jax.lax.dynamic_update_slice(
+        cache["k_pe"], k_pe_new.astype(cache["k_pe"].dtype), (0, cache_len, 0)
+    )
+    c_kv = constrain(c_kv, ("pod", "data"), model_axis, None)
+    k_pe = constrain(k_pe, ("pod", "data"), model_axis, None)
+    # absorb W_uk into q
+    w_uk = p["w_uk"].reshape(r, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)  # [B,H,r]
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bhd,bsd->bhs", q_pe[:, 0], k_pe, preferred_element_type=jnp.float32)
+    ) * ((dn + dr) ** -0.5)
+    Smax = c_kv.shape[1]
+    valid = jnp.arange(Smax) <= cache_len
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, c_kv.astype(jnp.float32))  # [B,H,r]
+    w_uv = p["w_uv"].reshape(r, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(x.dtype), w_uv).reshape(B, 1, H * dv)
+    out = o @ p["w_o"]
+    return constrain(out, ("pod", "data"), None, None), {"c_kv": c_kv, "k_pe": k_pe}

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k.
+
+Two dispatch implementations:
+
+  "gshard"  — capacity-bucketed scatter dispatch (pjit-friendly): tokens are
+              scattered into a per-expert buffer [E, C, D] with
+              position-in-expert computed by cumsum; overflow tokens are
+              dropped (capacity_factor).  Expert weights are 2-D sharded
+              (experts over `expert_axis`, each expert's d_ff over
+              `expert_ff_axis`) so even the 384-expert trillion-parameter
+              config keeps O(params/chips) residency.
+  "dense"   — every token through every expert, weighted by the router
+              (exact; O(E) FLOPs) — the smoke-test oracle that capacity
+              dispatch is validated against (with cf high enough to drop
+              nothing the two agree on kept tokens).
+
+Router: softmax top-k with load-balancing auxiliary loss (Switch-style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from .layers import Initializer, constrain
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(init: Initializer, cfg: ArchConfig):
+    mo = cfg.moe
+    d = cfg.d_model
+    f = mo.d_ff_expert
+    p = {
+        "router": init.normal((d, mo.num_experts), scale=0.02),
+        "w_gate": init.normal((mo.num_experts, d, f)),
+        "w_up": init.normal((mo.num_experts, d, f)),
+        "w_down": init.normal((mo.num_experts, f, d)),
+    }
+    if mo.num_shared:
+        p["shared"] = {
+            "w_gate": init.normal((d, f * mo.num_shared)),
+            "w_up": init.normal((d, f * mo.num_shared)),
+            "w_down": init.normal((f * mo.num_shared, d)),
+        }
+    return p
+
+
+def _router(p, x2d, mo):
+    """x2d [N,D] -> (gates [N,K], experts [N,K] int, aux loss scalar)."""
+    logits = (x2d @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [N,E]
+    gates, experts = jax.lax.top_k(probs, mo.top_k)  # [N,K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    me = probs.mean(axis=0)  # mean router prob per expert
+    onehot = jax.nn.one_hot(experts[:, 0], mo.num_experts, dtype=jnp.float32)
+    ce = onehot.mean(axis=0)  # fraction of tokens whose top-1 is e
+    aux = mo.num_experts * jnp.sum(me * ce)
+    return gates, experts, aux
+
+
+def _expert_ffn(p, buf, act_fn, expert_axis, ff_axis):
+    """buf [E,C,D] -> [E,C,D] through each expert's gated MLP."""
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    g = constrain(g, expert_axis, None, ff_axis)
+    u = constrain(u, expert_axis, None, ff_axis)
+    h = act_fn(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    return constrain(out, expert_axis, None, None)
+
+
+def moe_ffn(
+    p,
+    x,
+    cfg: ArchConfig,
+    impl: str = "gshard",
+    expert_axis: str = "data",
+    ff_axis: str = "model",
+):
+    """x [B,S,D] -> ([B,S,D], aux_loss)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    x2d = x.reshape(N, D)
+    act_fn = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+    gates, experts, aux = _router(p, x2d.astype(jnp.float32), mo)
+
+    if impl == "dense":
+        # exact: every token through every expert (smoke-test oracle)
+        g = jnp.einsum("nd,edf->nef", x2d, p["w_gate"])
+        u = jnp.einsum("nd,edf->nef", x2d, p["w_up"])
+        h = act_fn(g) * u
+        per_e = jnp.einsum("nef,efd->ned", h, p["w_down"])  # [N,E,D]
+        w = jnp.zeros((N, mo.num_experts)).at[jnp.arange(N)[:, None], experts].add(gates)
+        y = jnp.einsum("ned,ne->nd", per_e.astype(jnp.float32), w).astype(x.dtype)
+    elif impl == "gshard":
+        E = mo.num_experts
+        C = max(1, int(round(mo.capacity_factor * N * mo.top_k / E)))
+        flat_e = experts.reshape(-1)  # [N*K] expert id per slot
+        flat_g = gates.reshape(-1)
+        # position of each slot within its expert (cumsum over slot order)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [NK,E]
+        pos = jnp.cumsum(onehot, axis=0) - 1  # position per expert
+        flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = flat_pos < C
+        flat_g = jnp.where(keep, flat_g, 0.0)
+        safe_pos = jnp.where(keep, flat_pos, C - 1)
+        tok_idx = jnp.repeat(jnp.arange(N), mo.top_k)
+        # scatter tokens into [E,C,D]
+        buf = jnp.zeros((E, C, D), dtype=x.dtype)
+        contrib = jnp.where(keep[:, None], x2d[tok_idx], 0.0)
+        buf = buf.at[flat_e, safe_pos].add(contrib)
+        buf = constrain(buf, expert_axis, None, None)
+        out_buf = _expert_ffn(p, buf, act_fn, expert_axis, ff_axis)
+        # gather back, weighted by gates
+        y2 = out_buf[flat_e, safe_pos]  # [NK,D]
+        y2 = y2 * flat_g[:, None].astype(y2.dtype)
+        y = jnp.zeros((N, D), dtype=jnp.float32).at[tok_idx].add(y2.astype(jnp.float32))
+        y = y.astype(x.dtype)
+    else:
+        raise ValueError(impl)
+
+    y = y.reshape(B, S, D)
+    if mo.num_shared:
+        sp = p["shared"]
+        g = x @ sp["w_gate"]
+        u = x @ sp["w_up"]
+        g = constrain(g, ("pod", "data"), None, ff_axis)
+        u = constrain(u, ("pod", "data"), None, ff_axis)
+        y = y + (act_fn(g) * u) @ sp["w_down"]
+    return constrain(y, ("pod", "data"), None, None), aux * mo.router_aux_weight

@@ -1,0 +1,253 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Selective state space per head h (state size N, head dim P):
+    s_t = a_t * s_{t-1} + (dt_t * x_t) B_t^T        s in R^{P x N}
+    y_t = s_t C_t + D_h x_t                         a_t = exp(dt_t * A_h)
+
+Two train-time evaluators:
+  * ``ssd_reference`` — step-by-step lax.scan over time (the oracle);
+  * ``ssd_chunked``   — the SSD block-decomposition: quadratic *within* chunks
+    (matmul-friendly, MXU-shaped) + a chunk-level state recurrence.  This is
+    the XLA counterpart of the Pallas kernel in repro.kernels.ssd_scan.
+
+Plus ``ssd_decode_step`` (O(1) state update for serving) and the full mixer
+(`mamba_mixer`) with causal depthwise conv + gating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from .layers import Initializer, constrain, rms_norm
+
+__all__ = [
+    "init_mamba",
+    "mamba_mixer",
+    "mamba_decode_step",
+    "ssd_reference",
+    "ssd_chunked",
+    "init_mamba_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, A, B, C, D):
+    """Oracle: sequential scan over time.
+
+    x [b,s,h,p], dt [b,s,h], A [h], B/C [b,s,g,n] (g broadcast over heads),
+    D [h].  Returns y [b,s,h,p].
+    """
+    b, s, h, p = x.shape
+    g = B.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)  # [b,s,h,n]
+    Ch = jnp.repeat(C, rep, axis=2)
+    a = jnp.exp(dt * A[None, None, :])  # [b,s,h]
+    xbar = x * dt[..., None]  # [b,s,h,p]
+
+    def step(state, inp):  # state [b,h,p,n]
+        a_t, x_t, B_t, C_t = inp
+        state = state * a_t[..., None, None] + x_t[..., :, None] * B_t[..., None, :]
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, C_t)
+        return state, y_t
+
+    init = jnp.zeros((b, h, p, B.shape[-1]), dtype=jnp.float32)
+    xs = (
+        jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(xbar, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Ch, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # [b,s,h,p]
+    return (y + x.astype(jnp.float32) * D[None, None, :, None]).astype(x.dtype)
+
+
+def _segsum(logd):
+    """[..., L] -> [..., L, L] lower-triangular cumulative log-decay:
+    seg[i, j] = cum[i] - cum[j]  (the decay from emitting step j to step i)."""
+    L = logd.shape[-1]
+    cum = jnp.cumsum(logd, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 64):
+    """SSD block decomposition (matmul form + inter-chunk state scan)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+    f32 = jnp.float32
+
+    Bh = jnp.repeat(B, rep, axis=2).astype(f32).reshape(b, nc, chunk, h, n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(f32).reshape(b, nc, chunk, h, n)
+    xbar = (x * dt[..., None]).astype(f32).reshape(b, nc, chunk, h, p)
+    logd = (dt * A[None, None, :]).astype(f32).reshape(b, nc, chunk, h)  # log decay per step
+
+    # --- intra-chunk (quadratic, matmul-friendly) ---
+    seg = _segsum(jnp.moveaxis(logd, -1, -2))  # [b,nc,h,L,L]
+    Ldec = jnp.exp(seg)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)  # [b,nc,h,L,S]
+    y_intra = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Ldec, xbar)
+
+    # --- chunk states ---
+    cum = jnp.cumsum(jnp.moveaxis(logd, -1, -2), axis=-1)  # [b,nc,h,L]
+    total = cum[..., -1]  # [b,nc,h]
+    decay_to_end = jnp.exp(total[..., None] - cum)  # [b,nc,h,L]
+    states = jnp.einsum("bchl,bclhn,bclhp->bchpn", decay_to_end, Bh, xbar)  # [b,nc,h,p,n]
+
+    # --- inter-chunk recurrence over chunk states ---
+    def step(carry, inp):
+        st, tot = inp
+        new = carry * jnp.exp(tot)[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, p, n), dtype=f32)
+    _, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [b,nc,h,p,n] state before chunk
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)  # decay from chunk start to position l (inclusive)
+    y_inter = jnp.einsum("bchl,bclhn,bchpn->bclhp", in_decay, Ch, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return (y + x.astype(f32) * D[None, None, :, None]).astype(x.dtype)
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """One-token state update: state [b,h,p,n] fp32; x [b,h,p]; dt [b,h];
+    B/C [b,g,n].  Returns (new_state, y [b,h,p])."""
+    h = x.shape[1]
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(dt * A[None, :]).astype(jnp.float32)  # [b,h]
+    xbar = (x * dt[..., None]).astype(jnp.float32)
+    state = state * a[..., None, None] + xbar[..., :, None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + x.astype(jnp.float32) * D[None, :, None]
+    return state, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full mixer (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(init: Initializer, cfg: ArchConfig):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in = ssm.d_inner(d)
+    h = ssm.n_heads(d)
+    n = ssm.d_state
+    g = 1  # single B/C group (Mamba-2 default ngroups=1)
+    conv_dim = d_in + 2 * g * n
+    # in-projection split by stream (z gate / conv inputs / dt) so each gets
+    # its own TP sharding — the fused [d, 2*d_in+2gn+h] form has a mesh-
+    # indivisible output axis (e.g. hymba's 6482)
+    return {
+        "w_z": init.normal((d, d_in)),
+        "w_xbc": init.normal((d, conv_dim)),
+        "w_dt": init.normal((d, h)),
+        "conv_w": init.normal((ssm.d_conv, conv_dim), scale=0.2),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": init.ones((h,), dtype=jnp.float32),
+        "dt_bias": init.zeros((h,), dtype=jnp.float32),
+        "norm_w": init.ones((d_in,)),
+        "w_out": init.normal((d_in, d)),
+    }
+
+
+def _in_proj(p, x, cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    h = ssm.n_heads(cfg.d_model)
+    n = ssm.d_state
+    g = 1
+    z = x @ p["w_z"]
+    xbc = x @ p["w_xbc"]
+    dt = x @ p["w_dt"]
+    return z, xbc, dt, d_in, h, n, g
+
+
+def _causal_conv(xbc, conv_w, state=None):
+    """Depthwise causal conv along seq: xbc [b,s,c], conv_w [k,c]."""
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), dtype=xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    out = sum(xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out), new_state
+
+
+def mamba_mixer(p, x, cfg: ArchConfig, impl: str = "chunked", model_axis: str = "model"):
+    """x [b,s,d] -> [b,s,d].  Heads sharded over the model axis."""
+    ssm = cfg.ssm
+    z, xbc, dt, d_in, h, n, g = _in_proj(p, x, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"])
+    xs, B, C = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    b, s, _ = x.shape
+    xs = xs.reshape(b, s, h, ssm.head_dim)
+    xs = constrain(xs, ("pod", "data"), None, model_axis, None)
+    B = B.reshape(b, s, g, n)
+    C = C.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    if impl == "reference":
+        y = ssd_reference(xs, dt, A, B, C, p["D"])
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+
+        y = kops.ssd_scan(xs, dt, A, B, C, p["D"], chunk=ssm.chunk)
+    else:
+        y = ssd_chunked(xs, dt, A, B, C, p["D"], chunk=min(ssm.chunk, s))
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return constrain(out, ("pod", "data"), None, None)
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    h = ssm.n_heads(cfg.d_model)
+    g = 1
+    conv_dim = d_in + 2 * g * ssm.d_state
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype=dtype),
+        "state": jnp.zeros((batch, h, ssm.head_dim, ssm.d_state), dtype=jnp.float32),
+    }
+
+
+def mamba_decode_step(p, x, cache, cfg: ArchConfig):
+    """x [b,1,d]; cache {conv, state} -> (out [b,1,d], new cache)."""
+    ssm = cfg.ssm
+    z, xbc, dt, d_in, h, n, g = _in_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], state=cache["conv"])
+    xs, B, C = jnp.split(xbc[:, 0], [d_in, d_in + g * n], axis=-1)
+    b = x.shape[0]
+    xs = xs.reshape(b, h, ssm.head_dim)
+    B = B.reshape(b, g, n)
+    C = C.reshape(b, g, n)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    state, y = ssd_decode_step(cache["state"], xs, dtv, A, B, C, p["D"])
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out, {"conv": conv_state, "state": state}

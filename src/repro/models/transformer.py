@@ -1,0 +1,499 @@
+"""Generic decoder-only LM assembled from an ArchConfig.
+
+Families: dense (GQA), moe (GQA or MLA + routed experts), ssm (Mamba-2),
+hybrid (parallel attn+SSM branches, Hymba), vlm (patch-prefix, PaliGemma),
+audio (multi-codebook, MusicGen).
+
+Entry points (all pure functions of (params, batch)):
+  init_params / param_shapes      — parameters (stacked [L, ...] for scan)
+  forward                         — logits for a full sequence (train/prefill)
+  loss_fn                         — mean token cross-entropy (+ MoE aux)
+  init_cache / cache_shapes       — decode caches (KV / ring / latent / state)
+  prefill                         — logits + populated cache
+  decode_step                     — one-token serve step against the cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShardingPolicy
+from .attention import attention, decode_attention
+from .layers import (
+    Initializer,
+    apply_rope,
+    constrain,
+    cross_entropy,
+    init_glu_mlp,
+    glu_mlp,
+    rms_norm,
+    rope,
+)
+from .mla import init_mla, init_mla_cache, mla_attention, mla_decode_step
+from .moe import init_moe, moe_ffn
+from .ssm import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_decode_step,
+    mamba_mixer,
+)
+
+__all__ = [
+    "init_params",
+    "param_shapes",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "cache_shapes",
+    "prefill",
+    "decode_step",
+]
+
+DP = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(init: Initializer, cfg: ArchConfig):
+    D, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "w_q": init.normal((D, H * hd)),
+        "w_k": init.normal((D, KVH * hd)),
+        "w_v": init.normal((D, KVH * hd)),
+        "w_o": init.normal((H * hd, D)),
+    }
+
+
+def _init_block(init: Initializer, cfg: ArchConfig):
+    p: dict = {"ln1": init.ones((cfg.d_model,))}
+    if cfg.family in ("dense", "vlm", "audio"):
+        p["attn"] = _init_attn(init, cfg)
+        p["ln2"] = init.ones((cfg.d_model,))
+        p["mlp"] = init_glu_mlp(init, cfg.d_model, cfg.d_ff)
+    elif cfg.family == "moe":
+        p["attn"] = init_mla(init, cfg) if cfg.mla else _init_attn(init, cfg)
+        p["ln2"] = init.ones((cfg.d_model,))
+        p["moe"] = init_moe(init, cfg)
+    elif cfg.family == "ssm":
+        p["mamba"] = init_mamba(init, cfg)
+    elif cfg.family == "hybrid":
+        p["attn"] = _init_attn(init, cfg)
+        p["mamba"] = init_mamba(init, cfg)
+        p["ln2"] = init.ones((cfg.d_model,))
+        p["mlp"] = init_glu_mlp(init, cfg.d_model, cfg.d_ff)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_params(cfg: ArchConfig, policy: ShardingPolicy | None = None, seed: int = 0, dtype=jnp.bfloat16):
+    policy = policy or ShardingPolicy()
+    init = Initializer(seed, dtype=dtype)
+    params: dict = {}
+    V = cfg.padded_vocab
+    if cfg.family == "audio":
+        params["embed"] = init.normal((cfg.num_codebooks, V, cfg.d_model), scale=0.02)
+        params["heads"] = init.normal((cfg.num_codebooks, cfg.d_model, V))
+    else:
+        params["embed"] = init.normal((V, cfg.d_model), scale=0.02)
+        if not cfg.tie_embeddings:
+            params["head"] = init.normal((cfg.d_model, V))
+    if cfg.family == "vlm":
+        params["patch_proj"] = init.normal((cfg.patch_dim, cfg.d_model))
+    # stacked layers
+    blocks = [_init_block(init, cfg) for _ in range(cfg.num_layers)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params["ln_f"] = init.ones((cfg.d_model,))
+    return params
+
+
+def param_shapes(cfg: ArchConfig, policy: ShardingPolicy | None = None, dtype=jnp.bfloat16):
+    """Shape tree without allocation (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, policy, 0, dtype))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_op(p, x, cfg: ArchConfig, policy: ShardingPolicy, positions, kv_override=None):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["w_q"]).reshape(B, S, H, hd)
+    k = (x @ p["w_k"]).reshape(B, S, KVH, hd)
+    v = (x @ p["w_v"]).reshape(B, S, KVH, hd)
+    if policy.sp_activations and S > 1:
+        # project locally on seq shards, THEN gather the (GQA-small) K/V —
+        # otherwise GSPMD gathers the full [B,S,D] hidden instead
+        k = constrain(k, DP, policy.model_axis, None, None)
+        v = constrain(v, DP, policy.model_axis, None, None)
+    if policy.qkv_feature_shard:
+        q = constrain(q, DP, None, policy.model_axis, None)
+    cos, sin = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+    k = apply_rope(k, cos[:, :, None], sin[:, :, None])
+    window = cfg.window if cfg.attn_type == "swa" else 0
+    out = attention(
+        q,
+        k,
+        v,
+        impl=policy.attention_impl,
+        causal=True,
+        window=window,
+        q_chunk=policy.attn_chunk,
+        kv_chunk=policy.attn_chunk,
+        block_skip=policy.attn_block_skip,
+        model_axis=policy.model_axis,
+        shard_seq=policy.shard_seq_attn,
+    )
+    out = out.reshape(B, S, H * hd) @ p["w_o"]
+    return constrain(out, *_res_spec(policy, S)), (k, v)
+
+
+def _block(p, x, cfg: ArchConfig, policy: ShardingPolicy, positions):
+    """One decoder block (train/prefill form).  Returns (x, aux, cache_kv)."""
+    aux = jnp.zeros((), dtype=jnp.float32)
+    cache = ()
+    x = constrain(x, *_res_spec(policy, x.shape[1]))
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        x = x + mamba_mixer(p["mamba"], h, cfg, impl=_ssm_impl(policy), model_axis=policy.model_axis)
+        return x, aux, cache
+    if cfg.family == "hybrid":
+        attn_out, kv = _attn_op(p["attn"], h, cfg, policy, positions)
+        ssm_out = mamba_mixer(p["mamba"], h, cfg, impl=_ssm_impl(policy), model_axis=policy.model_axis)
+        x = x + 0.5 * (attn_out + ssm_out)
+        cache = kv
+    elif cfg.mla is not None:
+        attn_out, mla_cache = mla_attention(p["attn"], h, cfg, positions)
+        x = x + attn_out
+        cache = mla_cache
+    else:
+        attn_out, kv = _attn_op(p["attn"], h, cfg, policy, positions)
+        x = x + attn_out
+        cache = kv
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = moe_ffn(
+            p["moe"], h2, cfg, impl=policy.moe_impl,
+            expert_axis=policy.expert_axis, ff_axis=policy.expert_ff_axis,
+        )
+        x = x + ff
+    else:
+        x = x + glu_mlp(p["mlp"], h2, act=cfg.act, model_axis=policy.model_axis,
+                        out_spec=_res_spec(policy, x.shape[1]))
+    return x, aux, cache
+
+
+def _ssm_impl(policy: ShardingPolicy) -> str:
+    return {"naive": "reference", "chunked": "chunked", "pallas": "pallas"}[policy.attention_impl]
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ArchConfig, tokens, patches=None):
+    if cfg.family == "audio":
+        # tokens [B,S,K]
+        parts = [
+            jnp.take(params["embed"][k], tokens[..., k], axis=0)
+            for k in range(cfg.num_codebooks)
+        ]
+        x = sum(parts)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and patches is not None:
+        # decode steps carry no patches (the prefix was consumed at prefill)
+        px = patches.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+    return x
+
+
+def _res_spec(policy: ShardingPolicy, seq_len: int):
+    """Residual-stream sharding: batch over dp; seq over model when SP is on
+    (decode steps have seq 1 — never SP-shard those)."""
+    if policy.sp_activations and seq_len > 1:
+        return (DP, policy.model_axis, None)
+    return (DP, None, None)
+
+
+def _head(params, cfg: ArchConfig, x, policy: ShardingPolicy, fp32: bool = True):
+    if cfg.family == "audio":
+        logits = jnp.einsum("bsd,kdv->bskv", x, params["heads"])
+        logits = constrain(logits, DP, None, None, policy.model_axis)
+    else:
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["head"]
+        logits = constrain(logits, DP, None, policy.model_axis)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]  # drop pad rows pre-softmax
+    return logits.astype(jnp.float32) if fp32 else logits
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, policy: ShardingPolicy, tokens, patches=None, collect_cache=False):
+    """Full-sequence forward.  Returns (logits, aux, caches_or_None)."""
+    x = _embed(params, cfg, tokens, patches)
+    B, S, _ = x.shape
+    x = constrain(x, *_res_spec(policy, S))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    block_fn = partial(_block, cfg=cfg, policy=policy, positions=positions)
+    if policy.remat == "block":
+        block_fn = jax.checkpoint(block_fn)
+
+    if policy.scan_layers:
+        def body(carry, layer_p):
+            y, aux, cache = block_fn(layer_p, carry)
+            return y, (aux, cache if collect_cache else ())
+
+        x, (auxs, caches) = jax.lax.scan(body, x, params["blocks"])
+        aux = auxs.sum()
+    else:
+        aux = jnp.zeros((), dtype=jnp.float32)
+        caches = []
+        L = cfg.num_layers
+        for l in range(L):
+            layer_p = jax.tree.map(lambda a: a[l], params["blocks"])
+            x, a, cache = block_fn(layer_p, x)
+            aux = aux + a
+            if collect_cache:
+                caches.append(cache)
+        if collect_cache and caches and caches[0] != ():
+            caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    x = constrain(x, *_res_spec(policy, x.shape[1]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params, cfg, x, policy, fp32=policy.logits_fp32)
+    return logits, aux, (caches if collect_cache else None)
+
+
+def loss_fn(params, cfg: ArchConfig, policy: ShardingPolicy, batch):
+    """batch: {tokens, labels, [patches], [mask]} -> (loss, metrics)."""
+    if cfg.family == "vlm":
+        assert batch.get("patches") is not None, "vlm training needs patch embeddings"
+    logits, aux, _ = forward(params, cfg, policy, batch["tokens"], batch.get("patches"))
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # patch prefix produces positions without labels: score text tail only
+        logits = logits[:, cfg.num_patches :]
+    loss = cross_entropy(logits, labels, batch.get("mask"))
+    total = loss + aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                 kv_dtype: str = "bf16"):
+    c: dict = {}
+    if cfg.has_attention:
+        if cfg.mla is not None:
+            c["mla"] = init_mla_cache(cfg, batch, max_len, dtype)
+        else:
+            w = cfg.window if cfg.attn_type == "swa" else 0
+            L = min(max_len, w) if w else max_len
+            kvd = jnp.int8 if kv_dtype == "int8" else dtype
+            c["k"] = jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype=kvd)
+            c["v"] = jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype=kvd)
+            if kv_dtype == "int8":
+                # per-(token, kv-head) scales — absmax/127 linear quantization
+                c["k_scale"] = jnp.zeros((batch, L, cfg.num_kv_heads), dtype=jnp.float32)
+                c["v_scale"] = jnp.zeros((batch, L, cfg.num_kv_heads), dtype=jnp.float32)
+    if cfg.has_ssm:
+        c["ssm"] = init_mamba_cache(cfg, batch, dtype)
+    return c
+
+
+def quantize_kv(x):
+    """x [..., hd] -> (int8 values, f32 scale over the hd axis)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               kv_dtype: str = "bf16"):
+    one = _layer_cache(cfg, batch, max_len, dtype, kv_dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), one
+    )
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                 kv_dtype: str = "bf16"):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype, kv_dtype))
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, policy: ShardingPolicy, tokens, patches=None, max_len=None):
+    """Run the prompt, build the decode cache.  Returns (logits, cache, cache_len)."""
+    logits, _, caches = forward(params, cfg, policy, tokens, patches, collect_cache=True)
+    S = tokens.shape[1] + (cfg.num_patches if cfg.family == "vlm" else 0)
+    B = tokens.shape[0]
+    max_len = max_len or S
+    cache = init_cache(cfg, B, max_len, dtype=params_dtype(params),
+                       kv_dtype=policy.kv_cache_dtype)
+    if cfg.has_attention and cfg.mla is None:
+        k, v = caches  # [L,B,S,KVH,hd]
+        w = cfg.window if cfg.attn_type == "swa" else 0
+        if w and S >= w:
+            tail_k, tail_v = k[:, :, S - w :], v[:, :, S - w :]
+            shift = (S - w) % w
+            k, v = jnp.roll(tail_k, shift, axis=2), jnp.roll(tail_v, shift, axis=2)
+            if policy.kv_cache_dtype == "int8":
+                (cache["k"], cache["k_scale"]) = quantize_kv(k)
+                (cache["v"], cache["v_scale"]) = quantize_kv(v)
+            else:
+                cache["k"], cache["v"] = k, v
+        elif policy.kv_cache_dtype == "int8":
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0, 0))
+            cache["k_scale"] = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0, 0, 0))
+            cache["v_scale"] = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0, 0, 0))
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0, 0))
+    elif cfg.mla is not None:
+        mla_c = caches  # {"c_kv" [L,B,S,r], "k_pe" [L,B,S,dr]}
+        cache["mla"]["c_kv"] = jax.lax.dynamic_update_slice(
+            cache["mla"]["c_kv"], mla_c["c_kv"], (0, 0, 0, 0)
+        )
+        cache["mla"]["k_pe"] = jax.lax.dynamic_update_slice(
+            cache["mla"]["k_pe"], mla_c["k_pe"], (0, 0, 0, 0)
+        )
+    if cfg.has_ssm:
+        # re-run the SSM branches step-wise to build states (prefill for SSM
+        # families goes through decode_step in the serving loop instead)
+        pass
+    return logits, cache, S
+
+
+def params_dtype(params):
+    leaves = jax.tree.leaves(params)
+    return leaves[0].dtype if leaves else jnp.bfloat16
+
+
+def _decode_block(p, x, cache, cache_len, cfg: ArchConfig, policy: ShardingPolicy):
+    B = x.shape[0]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if cfg.family == "ssm":
+        out, new_ssm = mamba_decode_step(p["mamba"], h, cache["ssm"], cfg)
+        new_cache["ssm"] = new_ssm
+        return x + out, new_cache
+
+    attn_out = None
+    if cfg.has_attention and cfg.mla is None:
+        H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (h @ p["attn"]["w_q"]).reshape(B, 1, H, hd)
+        k = (h @ p["attn"]["w_k"]).reshape(B, 1, KVH, hd)
+        v = (h @ p["attn"]["w_v"]).reshape(B, 1, KVH, hd)
+        posn = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+        cos, sin = rope(posn, hd, cfg.rope_theta)
+        q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+        k = apply_rope(k, cos[:, :, None], sin[:, :, None])
+        w = cfg.window if cfg.attn_type == "swa" else 0
+        slot = jax.lax.rem(cache_len, cache["k"].shape[1]) if w else cache_len
+        int8_kv = policy.kv_cache_dtype == "int8" and "k_scale" in cache
+        if int8_kv:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+            vsc = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+            new_cache["k"], new_cache["v"] = kc, vc
+            new_cache["k_scale"], new_cache["v_scale"] = ksc, vsc
+            # dequant fuses with the cache load: HBM reads stay int8-sized
+            kd = dequantize_kv(kc, ksc, h.dtype)
+            vd = dequantize_kv(vc, vsc, h.dtype)
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache["k"], new_cache["v"] = kc, vc
+            kd, vd = kc, vc
+        if w:
+            # ring buffer: all written slots are attendable (min(len+1, W))
+            count = jnp.minimum(cache_len + 1, kc.shape[1])
+            o = decode_attention(q, kd, vd, count, window=0, impl=policy.attention_impl,
+                                 model_axis=policy.model_axis, shard_seq=policy.shard_seq_attn)
+        else:
+            o = decode_attention(q, kd, vd, cache_len + 1, window=0, impl=policy.attention_impl,
+                                 model_axis=policy.model_axis, shard_seq=policy.shard_seq_attn)
+        attn_out = (o.reshape(B, 1, H * hd)) @ p["attn"]["w_o"]
+    elif cfg.mla is not None:
+        attn_out, new_mla = mla_decode_step(p["attn"], h, cache["mla"], cache_len, cfg,
+                                            model_axis=policy.model_axis)
+        new_cache["mla"] = new_mla
+
+    if cfg.family == "hybrid":
+        ssm_out, new_ssm = mamba_decode_step(p["mamba"], h, cache["ssm"], cfg)
+        new_cache["ssm"] = new_ssm
+        x = x + 0.5 * (attn_out + ssm_out)
+    else:
+        x = x + attn_out
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, _ = moe_ffn(p["moe"], h2, cfg, impl=policy.moe_impl,
+                        expert_axis=policy.expert_axis, ff_axis=policy.expert_ff_axis)
+        x = x + ff
+    else:
+        x = x + glu_mlp(p["mlp"], h2, act=cfg.act, model_axis=policy.model_axis)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, policy: ShardingPolicy, cache, tokens, cache_len):
+    """One serve step: tokens [B,1] (or [B,1,K] audio) -> (logits, new cache).
+
+    ``cache_len`` is the number of tokens already in the cache (traced scalar).
+    """
+    x = constrain(_embed(params, cfg, tokens), DP, None, None)
+    if policy.scan_layers:
+        def body(carry, xs):
+            layer_p, layer_cache = xs
+            y, new_cache = _decode_block(layer_p, carry, layer_cache, cache_len, cfg, policy)
+            return y, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        new_list = []
+        for l in range(cfg.num_layers):
+            layer_p = jax.tree.map(lambda a: a[l], params["blocks"])
+            layer_c = jax.tree.map(lambda a: a[l], cache)
+            x, nc = _decode_block(layer_p, x, layer_c, cache_len, cfg, policy)
+            new_list.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params, cfg, x, policy, fp32=policy.logits_fp32)
+    return logits, new_caches

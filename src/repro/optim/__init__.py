@@ -1,0 +1,23 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, cosine_lr, global_norm
+from .compress import (
+    CompressorState,
+    int8_compress,
+    int8_decompress,
+    topk_compress_init,
+    topk_compress_update,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "global_norm",
+    "CompressorState",
+    "int8_compress",
+    "int8_decompress",
+    "topk_compress_init",
+    "topk_compress_update",
+]

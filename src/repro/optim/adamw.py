@@ -1,0 +1,88 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Implemented from scratch (no optax dependency).  Optimizer moments live in a
+configurable dtype (fp32 default; bf16 halves the state for the 1T-parameter
+configs — see EXPERIMENTS.md memory notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_lr", "global_norm"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray  # scalar int32
+    m: Any  # pytree like params
+    v: Any
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), dtype=jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def cosine_lr(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    beta1=0.9,
+    beta2=0.95,
+    eps=1e-8,
+    weight_decay=0.1,
+    grad_clip=1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12)) if grad_clip else 1.0
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = beta1 * m32 + (1 - beta1) * g
+        v_new = beta2 * v32 + (1 - beta2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), {"grad_norm": gnorm}

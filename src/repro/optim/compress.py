@@ -1,0 +1,78 @@
+"""Gradient compression for the DCN-crossing (pod) axis.
+
+Two schemes, composable with the trainer:
+  * int8 stochastic-free linear quantization with per-tensor scale —
+    4x fewer bytes on the pod all-reduce (decompress -> psum -> identical
+    math up to quantization noise);
+  * top-k sparsification with error feedback (Stich et al.) — the residual
+    accumulator carries the unsent mass so the descent direction is unbiased
+    over time.
+
+Both are exercised by the DLT chain trainer (pod-axis gradient exchange) and
+unit-tested for round-trip / error-feedback invariants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "int8_compress",
+    "int8_decompress",
+    "CompressorState",
+    "topk_compress_init",
+    "topk_compress_update",
+]
+
+
+def int8_compress(x):
+    """x fp -> (int8 values, fp32 scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressorState:
+    residual: Any  # error-feedback accumulator, pytree like grads
+
+
+def topk_compress_init(grads) -> CompressorState:
+    return CompressorState(residual=jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads))
+
+
+def topk_compress_update(grads, state: CompressorState, k_frac: float = 0.05):
+    """Returns (sparse grads to transmit, new state).
+
+    The transmitted tensor is dense-shaped but zero outside the top-k entries
+    (collectives stay static-shaped; the byte saving on real links comes from
+    sending (values, indices) — the dense form keeps SPMD simple and the
+    selection math identical).
+    """
+
+    def one(g, r):
+        acc = r + g.astype(jnp.float32)
+        flat = acc.reshape(-1)
+        k = max(1, int(flat.shape[0] * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(flat) >= thresh).astype(jnp.float32)
+        sent = (flat * mask).reshape(g.shape)
+        new_r = (flat * (1 - mask)).reshape(g.shape)
+        return sent, new_r
+
+    flat, treedef = jax.tree.flatten(grads)
+    res = treedef.flatten_up_to(state.residual)
+    outs = [one(g, r) for g, r in zip(flat, res)]
+    sent = treedef.unflatten([o[0] for o in outs])
+    new_res = treedef.unflatten([o[1] for o in outs])
+    return sent, CompressorState(residual=new_res)

@@ -1,0 +1,15 @@
+"""Distributed runtime: sharding rules, step builders, DLT chain runner, FT."""
+
+from .sharding import batch_specs, cache_specs, param_specs, shardings_for
+from .train import TrainState, make_serve_step, make_train_state, make_train_step
+
+__all__ = [
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "shardings_for",
+    "TrainState",
+    "make_train_state",
+    "make_train_step",
+    "make_serve_step",
+]

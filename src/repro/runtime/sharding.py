@@ -1,0 +1,168 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer state, batches,
+caches (DESIGN.md §4).
+
+Conventions (mesh axes: optional 'pod', 'data', 'model'):
+  * weights [.., d_in, d_out]:  d_in over 'data' (FSDP/ZeRO-3), d_out over
+    'model' (TP) — flipped for down/output projections so TP contracts;
+  * expert weights [E, D, F]: E over 'data' (expert parallelism), F over
+    'model' — token routing crosses 'data', expert-TP crosses 'model';
+  * embeddings [V, D]: V over 'model', D over 'data';
+  * activations: batch over ('pod','data'); attention is sequence-sharded
+    over 'model' (constraint calls inside the model code);
+  * KV caches: sequence over 'model' (split-KV decode), batch over dp;
+  * optimizer moments inherit their parameter's spec (ZeRO).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, ShardingPolicy
+from repro.models.layers import fix_spec
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "shardings_for", "named"]
+
+DP = ("pod", "data")
+
+
+def _rule(path_keys: tuple, shape: tuple, policy: ShardingPolicy) -> P:
+    """Spec for one parameter leaf, keyed on its tree path + rank."""
+    name = path_keys[-1]
+    # ZeRO/FSDP shards over BOTH dp axes — on the multi-pod mesh the pod axis
+    # must not replicate optimizer state (1T-param configs double otherwise);
+    # fix_spec drops 'pod' on single-pod meshes
+    d = ("pod", "data") if policy.fsdp_params else None
+    m = policy.model_axis
+    nd = len(shape)
+
+    # --- embeddings / heads ---
+    if name == "embed":
+        if nd == 3:  # audio [K,V,D]
+            return P(None, m, d)
+        return P(m, d)
+    if name == "heads":  # audio [K,D,V]
+        return P(None, d, m)
+    if name == "head":  # [D,V]
+        return P(d, m)
+    if name == "patch_proj":
+        return P(None, d)
+    # --- MoE ---
+    # expert dim joins the pod axis too (ZeRO across pods; 384/32=12 etc.)
+    e_ax = ("pod", policy.expert_axis) if policy.expert_axis == "data" else policy.expert_axis
+    if "moe" in path_keys and name in ("w_gate", "w_up") and nd == 4:  # [L,E,D,F]
+        return P(None, e_ax, None, policy.expert_ff_axis)
+    if "moe" in path_keys and name == "w_down" and nd == 4:  # [L,E,F,D]
+        return P(None, e_ax, policy.expert_ff_axis, None)
+    if name == "router":  # [L,D,E]
+        return P(None, d, None)
+    # --- MLA ---
+    if name in ("w_dkv", "w_kr"):  # [L,D,r]
+        return P(None, d, None)
+    if name in ("w_uk", "w_uv"):  # [L,r,H*dh]
+        return P(None, None, m)
+    # --- mamba ---
+    if name in ("w_z", "w_xbc"):  # [L,D,d_in] / [L,D,conv_dim]
+        return P(None, d, m)
+    if name == "w_dt":  # [L,D,H] — H (e.g. 50) rarely mesh-divisible; tiny
+        return P(None, d, None)
+    if name == "conv_w":  # [L,k,C]
+        return P(None, None, m)
+    if name in ("A_log", "D", "dt_bias"):  # [L,H]
+        return P(None, None)
+    if name == "norm_w":  # [L,d_inner]
+        return P(None, m)
+    if name == "w_out":  # [L,d_inner,D]
+        return P(None, m, d)
+    # --- attention / MLP ---
+    if name in ("w_q", "w_k", "w_v", "w_gate", "w_up"):  # [L,D,X] or [D,X]
+        return P(*([None] * (nd - 2)), d, m)
+    if name in ("w_o", "w_down"):  # [L,X,D]
+        return P(*([None] * (nd - 2)), m, d)
+    if name == "w":  # generic linear
+        return P(*([None] * (nd - 2)), d, m)
+    # --- norms & scalars ---
+    return P(*([None] * nd))
+
+
+def param_specs(shape_tree, policy: ShardingPolicy | None = None):
+    """PartitionSpec tree matching a parameter (or optimizer moment) tree."""
+    policy = policy or ShardingPolicy()
+
+    def make(path, leaf):
+        keys = tuple(
+            p.key if isinstance(p, jax.tree_util.DictKey) else getattr(p, "name", str(p))
+            for p in path
+        )
+        return _rule(keys, leaf.shape, policy)
+
+    return jax.tree_util.tree_map_with_path(make, shape_tree)
+
+
+def batch_specs(cfg: ArchConfig, policy: ShardingPolicy | None = None, batch_size: int | None = None):
+    """Specs for a train/prefill batch dict."""
+    policy = policy or ShardingPolicy()
+    dp = DP
+    if batch_size is not None and batch_size == 1:
+        dp = None  # single-stream decode cannot shard batch
+    spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "audio":
+        spec = {"tokens": P(dp, None, None), "labels": P(dp, None, None)}
+    if cfg.family == "vlm":
+        spec["patches"] = P(dp, None, None)
+    return spec
+
+
+def cache_specs(cfg: ArchConfig, policy: ShardingPolicy | None = None,
+                batch_size: int | None = None, model_divisor: int | None = None):
+    """Specs for the decode cache tree (layer-stacked).
+
+    ``model_divisor``: the model-axis size when the cache is a jit *argument*
+    (arguments must divide exactly; internal constraints merely pad).  When the
+    SSM head count doesn't divide it, the head_dim axis is sharded instead
+    (every assigned head_dim is a multiple of 16).
+    """
+    policy = policy or ShardingPolicy()
+    m = policy.model_axis
+    dp = DP if (batch_size is None or batch_size > 1) else None
+    c: dict = {}
+    if cfg.has_attention:
+        if cfg.mla is not None:
+            c["mla"] = {
+                "c_kv": P(None, dp, m, None),  # [L,B,S,r] seq over model
+                "k_pe": P(None, dp, m, None),
+            }
+        else:
+            c["k"] = P(None, dp, m, None, None)  # [L,B,S,KVH,hd]
+            c["v"] = P(None, dp, m, None, None)
+            if policy.kv_cache_dtype == "int8":
+                c["k_scale"] = P(None, dp, m, None)  # [L,B,S,KVH]
+                c["v_scale"] = P(None, dp, m, None)
+    if cfg.has_ssm:
+        h = cfg.ssm.n_heads(cfg.d_model)
+        heads_ok = model_divisor is None or h % model_divisor == 0
+        c["ssm"] = {
+            "conv": P(None, dp, None, m),  # [L,B,k-1,C]
+            # [L,B,H,P,N]: heads over model when divisible, else head_dim
+            "state": (
+                P(None, dp, m, None if dp else "data", None)
+                if heads_ok else P(None, dp, None, m, None)
+            ),
+        }
+    return c
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (dropping absent axes)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, fix_spec(mesh, s)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shardings_for(mesh, cfg: ArchConfig, policy: ShardingPolicy, shape_tree):
+    """NamedSharding tree for a parameter tree on ``mesh``."""
+    return named(mesh, param_specs(shape_tree, policy))

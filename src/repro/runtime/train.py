@@ -1,0 +1,95 @@
+"""Train/serve step builders: value_and_grad + microbatch accumulation +
+AdamW, all pure and jit/pjit-ready.
+
+Microbatches are the intra-step counterpart of the paper's installments: the
+global batch is processed in Q sub-rounds (lax.scan) so activation and MoE
+dispatch memory stay bounded; the DLT planner picks the *inter-stage*
+installment structure, the trainer the *intra-stage* one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShardingPolicy, TrainConfig
+from repro.models import decode_step, loss_fn
+from repro.optim import AdamWState, adamw_init, adamw_update, cosine_lr
+
+__all__ = ["TrainState", "make_train_state", "make_train_step", "make_serve_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def make_train_state(params, tcfg: TrainConfig) -> TrainState:
+    dtype = jnp.dtype(tcfg.optimizer_state_dtype)
+    return TrainState(params=params, opt=adamw_init(params, state_dtype=dtype))
+
+
+def _split_micro(batch, n: int):
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ArchConfig, policy: ShardingPolicy, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_of(params, mb):
+        return loss_fn(params, cfg, policy, mb)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        n_mb = tcfg.microbatches
+        if n_mb > 1:
+            mbs = _split_micro(batch, n_mb)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32) / n_mb, g_acc, g)
+                return (g_acc, l_acc + l / n_mb), None
+
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        lr = cosine_lr(state.opt.step, tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        new_params, new_opt, om = adamw_update(
+            grads,
+            state.opt,
+            params,
+            lr=lr,
+            beta1=tcfg.beta1,
+            beta2=tcfg.beta2,
+            eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip,
+        )
+        metrics = {"loss": loss, "lr": lr, **om}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, policy: ShardingPolicy):
+    """Returns serve_step(params, cache, tokens, cache_len) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, cache_len):
+        return decode_step(params, cfg, policy, cache, tokens, cache_len)
+
+    return serve_step

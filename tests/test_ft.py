@@ -1,0 +1,93 @@
+"""Fault-tolerance machinery: failure replan, straggler feedback, elastic
+join — the paper's chain model exercised dynamically."""
+
+import numpy as np
+import pytest
+
+from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
+from repro.runtime.ft import FailureEvent, FailureSim, RecoveringChain, StragglerSim
+
+
+def _chain(m=4, q=1, n_loads=2):
+    speed = 1e9
+    stages = [StageSpec(f"s{i}", speed / (1 + 0.2 * i)) for i in range(m)]
+    links = [LinkSpec(bytes_per_sec=1e8, startup_sec=1e-4) for _ in range(m - 1)]
+    loads = [BatchSpec(num_samples=32, bytes_per_sample=1e4, flops_per_sample=1e6)
+             for _ in range(n_loads)]
+    return RecoveringChain(Planner(stages, links), loads, q=q)
+
+
+def test_plan_conserves_samples():
+    chain = _chain(q=2)
+    for n in range(2):
+        assert chain.plan.total_samples(n) == 32
+
+
+def test_failure_drops_stage_and_replans():
+    chain = _chain()
+    ms0 = chain.plan.makespan
+    chain.on_failure(FailureEvent(step=3, stage=1, restore_delay=0.1))
+    assert chain.n_stages == 3
+    assert chain.stage_names() == ["s0", "s2", "s3"]
+    for n in range(2):
+        assert chain.plan.total_samples(n) == 32
+    # availability dates (tau) push the makespan past the restore delay
+    assert chain.plan.makespan >= 0.1
+    assert chain.generation == 1
+
+
+def test_head_and_tail_failures():
+    for dead in (0, 3):
+        chain = _chain()
+        chain.on_failure(FailureEvent(step=0, stage=dead))
+        assert chain.n_stages == 3
+        assert chain.plan.total_samples(0) == 32
+
+
+def test_link_fusion_on_middle_failure():
+    chain = _chain()
+    z_before = [1.0 / l.bytes_per_sec for l in chain.planner.links]
+    chain.on_failure(FailureEvent(step=0, stage=2))
+    z_after = [1.0 / l.bytes_per_sec for l in chain.planner.links]
+    # store-and-forward through the dead stage's position: z fuses additively
+    assert len(z_after) == len(z_before) - 1
+    np.testing.assert_allclose(z_after[1], z_before[1] + z_before[2])
+
+
+def test_straggler_shifts_load_off_slow_stage():
+    chain = _chain(m=3)
+    base = chain.plan.samples
+    slow_before = sum(int(s[1]) for s in base)
+    # stage 1 suddenly runs 4x slower; feed observations until replan fires
+    replanned = False
+    for _ in range(6):
+        replanned |= chain.on_observation(1, chain.planner.stages[1].flops_per_sec / 4)
+        if replanned:
+            break
+    assert replanned, "10% drift must trigger a replan"
+    slow_after = sum(int(s[1]) for s in chain.plan.samples)
+    assert slow_after <= slow_before
+    for n in range(2):
+        assert chain.plan.total_samples(n) == 32
+
+
+def test_elastic_join_adds_capacity():
+    chain = _chain(m=2)
+    chain.on_join(StageSpec("new", 1e9), LinkSpec(1e8, 1e-4))
+    assert chain.n_stages == 3
+    assert chain.plan.total_samples(0) == 32
+
+
+def test_failure_sim_fires_once():
+    sim = FailureSim([FailureEvent(step=5, stage=1)])
+    assert sim.check(4) is None
+    ev = sim.check(5)
+    assert ev is not None and ev.stage == 1
+    assert sim.check(5) is None  # once
+
+
+def test_straggler_sim_profile():
+    s = StragglerSim(stage=2, after_step=10, slowdown=2.0)
+    assert s.effective_speed(2, 100.0, 9) == 100.0
+    assert s.effective_speed(2, 100.0, 10) == 50.0
+    assert s.effective_speed(1, 100.0, 99) == 100.0

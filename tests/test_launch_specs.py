@@ -1,0 +1,120 @@
+"""Dry-run cell specs: abstract input trees (no allocation), skip policy,
+coverage of all 40 assigned cells, and the HLO collective parser."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import SHAPES, get_arch
+from repro.launch.hlo import parse_collectives
+from repro.launch.specs import all_cells, cell_skip_reason, input_specs
+
+ARCHS = [
+    "phi4-mini-3.8b", "llama3.2-3b", "mistral-large-123b", "minitron-8b",
+    "paligemma-3b", "mamba2-2.7b", "deepseek-v2-lite-16b", "kimi-k2-1t-a32b",
+    "hymba-1.5b", "musicgen-medium",
+]
+
+
+def test_forty_cells_with_eight_skips():
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [(a, s) for a, s, reason in cells if reason]
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    runnable_long = {a for a, s, r in cells if s == "long_500k" and not r}
+    assert runnable_long == {"mamba2-2.7b", "hymba-1.5b"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_abstract_and_shaped(arch, shape):
+    cfg = get_arch(arch)
+    shp = SHAPES[shape]
+    specs = input_specs(cfg, shp)
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)  # no allocation
+    B = shp.global_batch
+    toks = specs["batch"]["tokens"]
+    if shape == "decode_32k":
+        assert toks.shape[:2] == (B, 1)
+        assert "cache" in specs and "cache_len" in specs
+    else:
+        assert toks.shape[0] == B
+        if cfg.family == "vlm":
+            assert toks.shape[1] == shp.seq_len - cfg.num_patches
+            assert specs["batch"]["patches"].shape == (B, cfg.num_patches, cfg.patch_dim)
+        elif cfg.family == "audio":
+            assert toks.shape == (B, shp.seq_len, cfg.num_codebooks)
+        else:
+            assert toks.shape == (B, shp.seq_len)
+
+
+def test_decode_cache_sizes_reasonable():
+    """MLA cache must be far smaller than an equivalent GQA cache (the point
+    of MLA), and SSM decode state must be sequence-length independent."""
+    ds = input_specs("deepseek-v2-lite-16b", "decode_32k")
+    cfg = get_arch("deepseek-v2-lite-16b")
+    mla_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(ds["cache"]))
+    gqa_bytes = (cfg.num_layers * 128 * 32768 * cfg.num_kv_heads * cfg.head_dim * 2) * 2
+    assert mla_bytes < gqa_bytes / 5
+    m1 = input_specs("mamba2-2.7b", "decode_32k")
+    m2 = input_specs("mamba2-2.7b", "long_500k")
+    per_stream1 = sum(l.size for l in jax.tree.leaves(m1["cache"])) / 128
+    per_stream2 = sum(l.size for l in jax.tree.leaves(m2["cache"])) / 1
+    assert per_stream1 == per_stream2  # O(1) state in sequence length
+
+
+def test_skip_reasons_only_long_context():
+    for a in ARCHS:
+        cfg = get_arch(a)
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_skip_reason(cfg, SHAPES[s]) is None
+
+
+HLO_SAMPLE = """
+HloModule test
+fused_computation {
+  p0 = bf16[128,256]{1,0} parameter(0)
+  ROOT r = bf16[128,256]{1,0} add(p0, p0)
+}
+ENTRY main {
+  %x = bf16[128,256]{1,0} parameter(0)
+  %y = f32[64]{0} parameter(1)
+  %ag = bf16[2048,256]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=add
+  %rs = bf16[8,256]{1,0} reduce-scatter(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  ROOT %t = (bf16[2048,256]{1,0}, f32[64]{0}) tuple(%ag, %ar)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    per_op, tot = parse_collectives(HLO_SAMPLE, total_devices=256)
+    assert set(per_op) == {"all-gather", "all-reduce", "reduce-scatter"}
+    assert per_op["all-gather"].count == 1
+    # all-gather: operand is the local shard (128*256*2 bytes)
+    assert per_op["all-gather"].operand_bytes == 128 * 256 * 2
+    assert per_op["all-gather"].result_bytes == 2048 * 256 * 2
+    # wire model: (n-1)/n of the RESULT for all-gather, n = 16 (iota group size)
+    assert abs(per_op["all-gather"].wire_bytes - (15 / 16) * 2048 * 256 * 2) < 1
+    # all-reduce: 2(n-1)/n of operand, n = 4 (explicit group list)
+    assert abs(per_op["all-reduce"].wire_bytes - 2 * (3 / 4) * 64 * 4) < 1
+    assert tot.count == 3
+
+
+def test_parse_dot_flops():
+    from repro.launch.hlo import parse_dot_flops
+
+    hlo = """
+ENTRY main {
+  %a = bf16[128,256]{1,0} parameter(0)
+  %b = bf16[256,512]{1,0} parameter(1)
+  %d = f32[128,512]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %d2 = f32[4,128,64]{2,1,0} dot(f32[4,128,256]{2,1,0} %x, f32[4,256,64]{2,1,0} %y), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={1}
+}
+"""
+    total, top = parse_dot_flops(hlo)
+    want1 = 2 * 128 * 512 * 256        # resolved via the instruction index
+    want2 = 2 * 4 * 128 * 64 * 256     # inline operand shape
+    assert total == want1 + want2, (total, want1, want2)

@@ -1,0 +1,140 @@
+"""Hypothesis property tests for the LP scheduler (system invariants).
+
+Invariants:
+  P1  the LP schedule replays feasibly through the ASAP simulator and the
+      replay achieves the LP objective (optimality has no slack);
+  P2  the LP is never beaten by any heuristic (global optimality for Q=1 ...
+      heuristics are single-installment except MULTIINST, which is dominated
+      by LP at its own installment counts);
+  P3  Theorem 1 — LP(Q+1) <= LP(Q) under the linear model;
+  P4  scipy/HiGHS and the in-tree simplex agree;
+  P5  the LP respects trivial lower bounds.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Chain,
+    Instance,
+    Loads,
+    check_feasible,
+    lower_bound,
+    multi_inst,
+    simple,
+    simulate,
+    single_inst,
+    solve,
+)
+
+MAX_EXAMPLES = 25
+
+
+@st.composite
+def instances(draw, max_m=4, max_n=3, max_q=2, latency=False):
+    m = draw(st.integers(1, max_m))
+    n = draw(st.integers(1, max_n))
+    q = draw(st.integers(1, max_q))
+    w = [draw(st.floats(0.1, 10.0)) for _ in range(m)]
+    z = [draw(st.floats(0.01, 10.0)) for _ in range(max(m - 1, 0))]
+    lat = [draw(st.floats(0.0, 0.5)) for _ in range(max(m - 1, 0))] if latency else 0.0
+    tau = [draw(st.floats(0.0, 2.0)) for _ in range(m)]
+    v_comm = [draw(st.floats(0.1, 5.0)) for _ in range(n)]
+    v_comp = [draw(st.floats(0.1, 5.0)) for _ in range(n)]
+    chain = Chain(w=w, z=z, tau=tau, latency=lat)
+    return Instance(chain, Loads(v_comm=v_comm, v_comp=v_comp), q=q)
+
+
+common = settings(
+    max_examples=MAX_EXAMPLES,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@given(inst=instances(latency=False))
+@common
+def test_p1_lp_replay_feasible_and_tight(inst):
+    res = solve(inst, backend="auto")
+    assert res.ok
+    errs = check_feasible(res.schedule)
+    assert not errs, errs
+    # replay (ASAP) == LP optimum, within numerical tolerance
+    assert res.makespan <= res.lp_makespan * (1 + 1e-6) + 1e-9
+    assert res.makespan >= res.lp_makespan * (1 - 1e-6) - 1e-9
+
+
+@given(inst=instances(latency=True))
+@common
+def test_p1b_lp_replay_feasible_with_latencies(inst):
+    res = solve(inst, backend="auto")
+    assert res.ok
+    assert not check_feasible(res.schedule)
+
+
+@given(inst=instances(max_q=1, latency=False))
+@common
+def test_p2_lp_dominates_heuristics(inst):
+    res = solve(inst.with_q(1), backend="auto")
+    assert res.ok
+    for heur in (simple, single_inst):
+        h = heur(inst)
+        if h.failed:
+            continue
+        assert res.makespan <= h.makespan * (1 + 1e-6) + 1e-9, (
+            heur.__name__,
+            res.makespan,
+            h.makespan,
+        )
+    h = multi_inst(inst, cap=4)
+    if not h.failed:
+        lp_q = solve(inst.with_q(list(h.instance.q)), backend="auto")
+        assert lp_q.makespan <= h.makespan * (1 + 1e-6) + 1e-9
+
+
+@given(inst=instances(max_m=3, max_n=2, max_q=1, latency=False))
+@common
+def test_p3_theorem1_monotonicity(inst):
+    prev = None
+    for q in (1, 2, 3):
+        res = solve(inst.with_q(q), backend="auto")
+        assert res.ok
+        if prev is not None:
+            assert res.lp_makespan <= prev * (1 + 1e-6) + 1e-9
+        prev = res.lp_makespan
+
+
+@given(inst=instances(max_m=3, max_n=2, max_q=2, latency=False))
+@common
+def test_p4_backends_agree(inst):
+    pytest.importorskip("scipy")
+    a = solve(inst, backend="simplex")
+    b = solve(inst, backend="scipy")
+    assert a.ok and b.ok
+    assert a.lp_makespan == pytest.approx(b.lp_makespan, rel=1e-6, abs=1e-9)
+
+
+@given(inst=instances(latency=False))
+@common
+def test_p5_lower_bound(inst):
+    res = solve(inst, backend="auto")
+    assert res.ok
+    assert res.makespan >= lower_bound(inst) - 1e-9
+
+
+@given(inst=instances(latency=True))
+@common
+def test_simulator_matches_feasibility_checker(inst):
+    """Any ASAP replay of any nonnegative normalized gamma is feasible."""
+    rng = np.random.default_rng(0)
+    T = inst.total_installments
+    g = rng.random((inst.m, T))
+    # normalize per load
+    cells = list(inst.cells())
+    for n in range(inst.N):
+        cols = [t for t, (ln, _) in enumerate(cells) if ln == n]
+        g[:, cols] /= g[:, cols].sum()
+    sched = simulate(inst, g)
+    assert not check_feasible(sched)

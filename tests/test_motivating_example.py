@@ -1,0 +1,128 @@
+"""Paper §3 — every closed form of the motivating example, exactly.
+
+Platform: 2 identical processors (w = lambda), z = 1; two unit loads.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LAMBDA_DIVERGENCE,
+    LAMBDA_SINGLE_INSTALLMENT,
+    check_feasible,
+    example_instance,
+    hand_schedule_lambda_3_4,
+    makespan_1,
+    makespan_2,
+    multi_inst,
+    multi_inst_makespan,
+    multi_inst_q2,
+    schedule_section_3_2,
+    simulate,
+    single_inst,
+    solve,
+)
+
+LAMBDAS = [0.3, 0.5, 0.64, 0.75, 1.0, 1.2, 1.366, 1.5, 2.0, 3.0, 5.0]
+
+
+@pytest.mark.parametrize("lam", LAMBDAS)
+def test_section_3_2_schedule_matches_makespan_1(lam):
+    inst = example_instance(lam)
+    sched = simulate(inst, schedule_section_3_2(lam))
+    assert not check_feasible(sched)
+    assert sched.makespan == pytest.approx(makespan_1(lam), abs=1e-12)
+
+
+@pytest.mark.parametrize("lam", [1.5, 2.0, 3.0, 5.0])
+def test_single_inst_matches_makespan_2_in_single_installment_regime(lam):
+    assert lam >= LAMBDA_SINGLE_INSTALLMENT
+    res = single_inst(example_instance(lam))
+    assert not res.failed
+    assert res.makespan == pytest.approx(makespan_2(lam), abs=1e-9)
+    assert not check_feasible(res.schedule)
+
+
+@pytest.mark.parametrize("lam", [1.5, 2.0, 3.0, 5.0])
+def test_makespan_gap_bounded_by_quarter(lam):
+    """Paper: 0 <= makespan_2 - makespan_1 <= 1/4 for lam >= (sqrt(3)+1)/2."""
+    gap = makespan_2(lam) - makespan_1(lam)
+    assert -1e-12 <= gap <= 0.25 + 1e-12
+
+
+@pytest.mark.parametrize("lam", LAMBDAS)
+def test_lp_single_installment_beats_both_closed_forms(lam):
+    res = solve(example_instance(lam), backend="simplex", cross_check=True)
+    assert res.ok
+    assert res.makespan <= makespan_1(lam) + 1e-9
+    # the §3.2 schedule is in fact LP(1)-optimal on this instance
+    assert res.makespan == pytest.approx(makespan_1(lam), rel=1e-9)
+
+
+def test_multi_inst_lambda_three_quarters_matches_paper():
+    """Q_2 = 3 installments, makespan = 9/10 (paper §3.4 case 3)."""
+    res = multi_inst(example_instance(0.75))
+    assert not res.failed
+    assert res.instance.q == (1, 3)
+    assert multi_inst_q2(0.75) == 3
+    assert res.makespan == pytest.approx(0.9, abs=1e-9)
+    assert res.makespan == pytest.approx(multi_inst_makespan(0.75), abs=1e-9)
+
+
+def test_hand_schedule_and_lp_beat_multiinst_at_three_quarters():
+    inst, gamma, expected = hand_schedule_lambda_3_4()
+    sched = simulate(inst, gamma)
+    assert not check_feasible(sched)
+    assert sched.makespan == pytest.approx(expected, abs=1e-12)
+    assert sched.makespan < 0.9  # beats MULTIINST
+    res = solve(inst, backend="simplex", cross_check=True)
+    # the paper's hand schedule is optimal among (2,2)-installment schedules
+    assert res.makespan <= expected + 1e-9
+    assert res.makespan == pytest.approx(expected, rel=1e-9)
+
+
+@pytest.mark.parametrize("lam", [0.3, 0.5, 0.6])
+def test_multi_inst_diverges_below_threshold(lam):
+    """Paper §3.4 case 1: no finite (nor infinite) installment series covers
+    load 2 when lam < (sqrt(17)+1)/8 — [19] finds no solution."""
+    assert lam < LAMBDA_DIVERGENCE
+    res = multi_inst(example_instance(lam))
+    assert res.failed
+    # ... while the LP solves the instance without trouble
+    lp = solve(example_instance(lam), backend="simplex")
+    assert lp.ok and np.isfinite(lp.makespan)
+
+
+@pytest.mark.parametrize("lam", [0.7, 0.75, 1.0, 1.2])
+def test_multi_inst_geometric_installments(lam):
+    """gamma_1^k(2) = lambda^k * gamma_2^1(1) for non-final installments."""
+    assert LAMBDA_DIVERGENCE < lam < LAMBDA_SINGLE_INSTALLMENT
+    res = multi_inst(example_instance(lam))
+    assert not res.failed
+    g2_load1 = lam / (2 * lam + 1)
+    cells = list(res.instance.cells())
+    k = 0
+    for t, (n, j) in enumerate(cells):
+        if n == 1 and j < res.instance.q[1] - 1:  # non-final installments
+            k += 1
+            expected = (lam**k) * g2_load1
+            assert res.gamma[0, t] == pytest.approx(expected, rel=1e-9)
+            assert res.gamma[1, t] == pytest.approx(expected, rel=1e-9)
+
+
+@pytest.mark.parametrize("lam", [0.7, 0.75, 1.0, 1.2])
+def test_multi_inst_q2_formula(lam):
+    res = multi_inst(example_instance(lam))
+    assert not res.failed
+    assert res.instance.q[1] == multi_inst_q2(lam)
+
+
+def test_lp_also_solves_divergent_regime_better_than_capped_multiinst():
+    """At lam = 0.5 the capped MULTIINST must dump work; LP(3) beats it."""
+    lam = 0.5
+    capped = multi_inst(example_instance(lam), cap=3)
+    assert not capped.failed
+    lp = solve(example_instance(lam, q=3), backend="simplex")
+    assert lp.makespan <= capped.makespan + 1e-9

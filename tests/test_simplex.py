@@ -1,0 +1,63 @@
+"""The in-tree simplex solver vs scipy/HiGHS on random LPs."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import solve_simplex
+
+
+def test_basic_2d():
+    # max x+y s.t. x+2y<=4, 3x+y<=6  -> min -(x+y); opt at (8/5, 6/5) = 14/5
+    res = solve_simplex([-1.0, -1.0], [[1, 2], [3, 1]], [4, 6])
+    assert res.ok
+    assert res.objective == pytest.approx(-14 / 5)
+
+
+def test_equality_and_negative_rhs():
+    # min x0 + x1 s.t. x0 - x1 <= -1  (=> x1 >= x0 + 1), x0 + x1 = 3
+    res = solve_simplex([1.0, 1.0], [[1, -1]], [-1], [[1, 1]], [3])
+    assert res.ok
+    assert res.objective == pytest.approx(3.0)
+    assert res.x[1] >= res.x[0] + 1 - 1e-9
+
+
+def test_infeasible():
+    # x0 <= -1 with x0 >= 0
+    res = solve_simplex([1.0], [[1.0]], [-1.0])
+    assert res.status == "infeasible"
+
+
+def test_unbounded():
+    # min -x0, no constraints binding
+    res = solve_simplex([-1.0], [[0.0]], [1.0])
+    assert res.status == "unbounded"
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+def test_random_lps_match_scipy(data):
+    scipy_opt = pytest.importorskip("scipy.optimize")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    n = data.draw(st.integers(2, 8))
+    m_ub = data.draw(st.integers(1, 8))
+    m_eq = data.draw(st.integers(0, 2))
+    c = rng.normal(size=n)
+    A_ub = rng.normal(size=(m_ub, n))
+    b_ub = rng.normal(size=m_ub) + 1.0
+    A_eq = rng.normal(size=(m_eq, n)) if m_eq else None
+    # make equalities feasible by construction
+    x0 = np.abs(rng.normal(size=n))
+    b_eq = A_eq @ x0 if m_eq else None
+    b_ub = np.maximum(b_ub, A_ub @ x0)  # x0 feasible => LP feasible
+
+    ours = solve_simplex(c, A_ub, b_ub, A_eq, b_eq)
+    ref = scipy_opt.linprog(
+        c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq, bounds=(0, None), method="highs"
+    )
+    if ref.status == 0:
+        assert ours.ok, f"ours={ours.status} but scipy optimal"
+        assert ours.objective == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)
+    elif ref.status == 3:  # unbounded
+        assert ours.status == "unbounded"
