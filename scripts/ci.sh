@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI gate: syntax-compile everything, then run the tier-1 suite.
+#
+# Usage: scripts/ci.sh [extra pytest args...]
+#
+# Property tests need `hypothesis` (see requirements-dev.txt); without it
+# they skip cleanly and the rest of the suite still gates.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== compile-all syntax gate =="
+python -m compileall -q src tests benchmarks scripts
+
+echo "== tier-1 tests =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -17,6 +17,7 @@ from .closed_form import (
 from .heuristics import (
     ALL_HEURISTICS,
     HeuristicResult,
+    adversary_sweep,
     heuristic_b,
     multi_inst,
     simple,
@@ -29,7 +30,7 @@ from .planner import BatchSpec, DLTPlan, LinkSpec, Planner, StageSpec
 from .schedule import Schedule, check_feasible
 from .simplex import SimplexResult, solve_simplex
 from .simulator import simulate
-from .solver import LPResult, lower_bound, solve
+from .solver import LPResult, lower_bound, solve, solve_batch
 from .theory import QStarResult, optimal_installments, q_monotonicity
 
 __all__ = [
@@ -47,6 +48,7 @@ __all__ = [
     "solve_simplex",
     "LPResult",
     "solve",
+    "solve_batch",
     "lower_bound",
     "BatchSpec",
     "DLTPlan",
@@ -59,6 +61,7 @@ __all__ = [
     "single_inst",
     "multi_inst",
     "heuristic_b",
+    "adversary_sweep",
     "ALL_HEURISTICS",
     "QStarResult",
     "q_monotonicity",

@@ -53,6 +53,7 @@ __all__ = [
     "single_inst",
     "multi_inst",
     "heuristic_b",
+    "adversary_sweep",
     "ALL_HEURISTICS",
 ]
 
@@ -472,3 +473,38 @@ ALL_HEURISTICS = {
     "HEURISTIC_B": heuristic_b,
     "MULTIINST": multi_inst,
 }
+
+
+def adversary_sweep(
+    instances: list,
+    strategies: dict | None = None,
+    simulator: str = "batched",
+) -> dict:
+    """Evaluate every heuristic over a population of instances at once.
+
+    The heuristics *construct* their fraction assignments serially (each is a
+    chain of tiny per-load LPs), but the achieved makespans — the §6 campaign
+    statistic — are measured in bulk: with ``simulator="batched"`` all
+    (instance, gamma) pairs of a strategy go through the vmapped ASAP
+    simulator (repro.engine) in a handful of fixed-shape batches instead of
+    one NumPy replay per instance.
+
+    Returns ``{strategy: np.ndarray of makespans}`` (inf where the strategy
+    failed), aligned with ``instances``.
+    """
+    strategies = dict(ALL_HEURISTICS) if strategies is None else strategies
+    out = {}
+    for name, fn in strategies.items():
+        results = [fn(inst) for inst in instances]
+        mks = np.full(len(instances), np.inf)
+        ok = [i for i, r in enumerate(results) if not r.failed]
+        if ok and simulator == "batched":
+            from repro.engine.batched_sim import makespans  # deferred: jax
+
+            mks[ok] = makespans(
+                [results[i].instance for i in ok], [results[i].gamma for i in ok]
+            )
+        elif ok:
+            mks[ok] = [results[i].makespan for i in ok]
+        out[name] = mks
+    return out

@@ -24,7 +24,7 @@ import dataclasses
 import numpy as np
 
 from .instance import Chain, Instance, Loads
-from .solver import LPResult, solve
+from .solver import LPResult, solve, solve_batch
 
 __all__ = ["StageSpec", "LinkSpec", "BatchSpec", "DLTPlan", "Planner"]
 
@@ -95,12 +95,15 @@ def _largest_remainder(frac: np.ndarray, total: int) -> np.ndarray:
 class Planner:
     """Solve + maintain DLT schedules for a chain of device groups."""
 
-    def __init__(self, stages: list, links: list, ewma: float = 0.5):
+    def __init__(self, stages: list, links: list, ewma: float = 0.5, cache=None):
         if len(links) != max(len(stages) - 1, 0):
             raise ValueError("need exactly len(stages)-1 links")
         self.stages = list(stages)
         self.links = list(links)
         self.ewma = ewma
+        # engine solution cache (repro.engine.cache.SolutionCache); shared
+        # across replans so identical platform states replay instead of solve
+        self._cache = cache
 
     # ---------------- instance construction ----------------
 
@@ -120,10 +123,38 @@ class Planner:
     # ---------------- planning ----------------
 
     def plan(self, batches: list, q: int | list = 1, backend: str = "auto") -> DLTPlan:
+        """Solve one plan.  ``backend="batched"`` routes through the engine
+        (repro.engine) — replans with an attached :class:`PlanService`-style
+        cache hit the solution cache instead of the LP."""
         inst = self.to_instance(batches, q=q)
-        res = solve(inst, backend=backend)
+        if backend == "batched":
+            res = solve_batch([inst], backend="batched", cache=self._cache)[0]
+        else:
+            res = solve(inst, backend=backend)
         if not res.ok:
             raise RuntimeError(f"DLT LP failed: {res.status}")
+        return self._plan_from_result(inst, res, batches)
+
+    def plan_bulk(
+        self, scenarios: list, q: int | list = 1, backend: str = "batched"
+    ) -> list:
+        """What-if fan-out: plan many batch-lists in one engine call.
+
+        ``scenarios`` is a list of batch-lists (e.g. one per straggler /
+        failure hypothesis over the *same* chain); all the instances are
+        solved in fixed-shape batches by the engine and integerized back
+        into :class:`DLTPlan`s.
+        """
+        insts = [self.to_instance(b, q=q) for b in scenarios]
+        results = solve_batch(insts, backend=backend, cache=self._cache)
+        plans = []
+        for inst, res, batches in zip(insts, results, scenarios):
+            if not res.ok:
+                raise RuntimeError(f"DLT LP failed: {res.status}")
+            plans.append(self._plan_from_result(inst, res, batches))
+        return plans
+
+    def _plan_from_result(self, inst: Instance, res: LPResult, batches: list) -> DLTPlan:
         cells = list(inst.cells())
         gamma = res.schedule.gamma  # [m, T]
         samples = []
@@ -143,7 +174,12 @@ class Planner:
     # ---------------- elasticity / fault tolerance ----------------
 
     def replan_without_stage(
-        self, dead: int, batches: list, restore_delay: float = 0.0, q: int | list = 1
+        self,
+        dead: int,
+        batches: list,
+        restore_delay: float = 0.0,
+        q: int | list = 1,
+        backend: str = "auto",
     ) -> "tuple[Planner, DLTPlan]":
         """Drop a failed stage, fuse its links, and re-solve from scratch.
 
@@ -166,8 +202,8 @@ class Planner:
         stages = [
             dataclasses.replace(s, available_at=max(s.available_at, restore_delay)) for s in stages
         ]
-        p2 = Planner(stages, links, ewma=self.ewma)
-        return p2, p2.plan(batches, q=q)
+        p2 = Planner(stages, links, ewma=self.ewma, cache=self._cache)
+        return p2, p2.plan(batches, q=q, backend=backend)
 
     def observe_step_time(self, stage: int, achieved_flops_per_sec: float) -> bool:
         """Straggler feedback: EWMA-update a stage's effective speed.

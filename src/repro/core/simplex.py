@@ -8,12 +8,17 @@ scipy's HiGHS backend (when present) and dispatches large instances there —
 the same engineering decision as the paper's use of GLPK.
 
 Implementation notes:
+  * Ruiz equilibration first: rows and columns of the constraint matrix are
+    iteratively scaled toward unit max-magnitude.  Schedule LPs mix
+    coefficients from ~1e-8 (per-FLOP times) to ~1e10 (volumes); without
+    scaling the fixed pivot tolerances misread rounding noise as negative
+    reduced costs on columns with no positive entries (a false "unbounded");
   * dense tableau, vectorized rank-1 pivot updates;
   * phase 1 minimizes the sum of artificial variables (b is made nonnegative
     row-wise first), phase 2 the user objective;
   * Dantzig pricing with a Bland's-rule fallback (anti-cycling) after a
     stall-detection threshold;
-  * tolerances tuned for the schedule LPs in this repo (values O(1e-3..1e3)).
+  * tolerances tuned for well-scaled data (which equilibration guarantees).
 """
 
 from __future__ import annotations
@@ -37,6 +42,31 @@ class SimplexResult:
     @property
     def ok(self) -> bool:
         return self.status == "optimal"
+
+
+def _equilibrate(A: np.ndarray, b: np.ndarray, c: np.ndarray, iters: int = 3):
+    """Ruiz scaling: A' = R A C with max-magnitudes driven toward 1.
+
+    Returns (A', b', c', col_scale); the scaled LP has the same status, and
+    ``x = col_scale * x'`` maps its solutions back (row scaling r_i > 0
+    preserves inequality directions; column scaling preserves x >= 0).
+    """
+    A = A.copy()
+    b = b.copy()
+    col = np.ones(A.shape[1])
+    absA = np.abs(A)
+    for _ in range(iters):
+        rmax = absA.max(axis=1, initial=0.0)
+        r = 1.0 / np.sqrt(np.where(rmax > 0, rmax, 1.0))
+        A *= r[:, None]
+        b *= r
+        np.abs(A, out=absA)
+        cmax = absA.max(axis=0, initial=0.0)
+        s = 1.0 / np.sqrt(np.where(cmax > 0, cmax, 1.0))
+        A *= s[None, :]
+        col *= s
+        np.abs(A, out=absA)
+    return A, b, c * col, col
 
 
 def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int) -> None:
@@ -102,6 +132,8 @@ def solve_simplex(
     # Build [A | slacks | artificials | rhs]; make rhs >= 0 row-wise.
     A = np.vstack([A_ub, A_eq]) if m_rows else np.zeros((0, n))
     b = np.concatenate([b_ub, b_eq])
+    c_orig = c
+    A, b, c, col_scale = _equilibrate(A, b, c)
     slack_sign = np.concatenate([np.ones(m_ub), np.zeros(m_eq)])  # +1 slack for <= rows
     neg = b < 0
     A[neg] *= -1.0
@@ -163,8 +195,8 @@ def solve_simplex(
     status, it2 = _run(T, basis, n + n_slack, max_iter)
     x = np.zeros(ncols)
     x[basis] = T[:m_rows, -1]
-    xv = x[:n]
-    obj = float(c @ xv)
+    xv = col_scale * x[:n]  # undo column scaling
+    obj = float(c_orig @ xv)
     if status != "optimal":
         return SimplexResult(xv, obj, status, it1 + it2)
     return SimplexResult(xv, obj, "optimal", it1 + it2)

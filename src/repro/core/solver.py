@@ -25,7 +25,7 @@ from .schedule import Schedule, check_feasible
 from .simplex import solve_simplex
 from .simulator import simulate
 
-__all__ = ["LPResult", "solve", "lower_bound"]
+__all__ = ["LPResult", "solve", "solve_batch", "lower_bound"]
 
 _SCIPY_THRESHOLD_VARS = 120  # above this, prefer HiGHS (our dense simplex is the
 # tiny-LP fast path, the no-scipy fallback, and the cross-check oracle; Bland
@@ -107,10 +107,17 @@ def solve(
         x, status = _solve_scipy(lp)
     elif backend == "simplex":
         x, status = _solve_simplex(lp)
+        if status in ("unbounded", "iteration_limit") and _have_scipy():
+            # schedule LPs are never unbounded — a non-optimal exit here is
+            # the dense simplex losing a numerical fight; HiGHS is the rescue
+            x, status = _solve_scipy(lp)
+            backend = "simplex+scipy"
     else:
         raise ValueError(backend)
 
-    if cross_check and _have_scipy() and status == "optimal":
+    # (skip after a scipy rescue: the dense simplex already failed once, and
+    # re-running it just burns its full iteration budget for no comparison)
+    if cross_check and _have_scipy() and status == "optimal" and backend in ("simplex", "scipy"):
         x2, s2 = _solve_scipy(lp) if backend == "simplex" else _solve_simplex(lp)
         if s2 == "optimal":
             o1, o2 = float(lp.c @ x), float(lp.c @ x2)
@@ -150,6 +157,35 @@ def solve(
         n_vars=lp.n_vars,
         n_rows=len(lp.b_ub) + len(lp.b_eq),
     )
+
+
+def solve_batch(
+    instances,
+    objective: str = "makespan",
+    backend: str = "batched",
+    cache=None,
+) -> list:
+    """Bulk counterpart of :func:`solve`: many instances, one call.
+
+    backend:
+      "batched" — the JAX engine (repro.engine): instances are bucketed by
+                  (m, T, q), their LPs solved by a vmapped simplex, and the
+                  fractions replayed through the vmapped ASAP simulator.
+                  Uncertified elements silently fall back to the serial path.
+      "serial"  — a plain Python loop over :func:`solve` (the reference).
+
+    Returns a list of :class:`LPResult` in caller order.  ``cache`` may be a
+    :class:`repro.engine.cache.SolutionCache` to reuse solutions across calls
+    (batched backend only).
+    """
+    instances = list(instances)
+    if backend == "serial":
+        return [solve(inst, objective=objective) for inst in instances]
+    if backend == "batched":
+        from repro.engine.service import solve_bulk  # deferred: jax import
+
+        return solve_bulk(instances, objective=objective, cache=cache)
+    raise ValueError(backend)
 
 
 def lower_bound(inst: Instance) -> float:

@@ -1,0 +1,264 @@
+"""Batched dense two-phase simplex under ``vmap`` — many small LPs at once.
+
+Solves, for each batch element:   min c.x   s.t.  A_ub x <= b_ub,
+A_eq x = b_eq,  x >= 0 — the same problem class as ``repro.core.simplex``,
+against which it is cross-checked (tests/test_engine_parity.py).
+
+Fixed-shape reformulation (everything static so ``vmap``/``jit`` apply):
+
+  * rows with negative rhs are flipped row-wise (A *= -1, slack coefficient
+    becomes -1), exactly like the NumPy solver;
+  * artificial variables are **implicit**: they start basic on eq/flipped
+    rows and are never allowed to re-enter once driven out, so their tableau
+    columns are never read — the tableau holds only structural + slack
+    columns, one inert zero *dummy* column, and the rhs.  Basis ids
+    ``> dummy`` denote a still-basic artificial; after phase 1 any zero-level
+    survivor is driven out where possible and the rest are remapped onto the
+    dummy column (it prices at 0, so it never re-enters).  This keeps the
+    tableau ~1/3 the width of the explicit form — the pivot's rank-1 update
+    is the memory-bound inner loop, so width is throughput;
+  * each pivot is a *single* fused rank-1 update ``T -= outer(pcol', prow)``
+    where ``pcol'`` carries ``piv - 1`` at the pivot row (this updates the
+    pivot row to ``T[row]/piv`` in the same pass) and is zeroed wholesale to
+    mask finished batch elements;
+  * each phase is a ``lax.while_loop`` whose carry holds (tableau, basis,
+    iteration, status); JAX's batching rule for ``while_loop`` masks finished
+    batch elements automatically;
+  * pricing is Dantzig with a Bland fallback after ``max(200, 4 rows)``
+    iterations (anti-cycling), and the ratio test tie-breaks on the smallest
+    basis index — mirroring the NumPy solver's rules.
+
+Statuses are small ints (see STATUS) so they vectorize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+__all__ = ["BatchedSimplexResult", "solve_simplex_batched", "STATUS"]
+
+_EPS = 1e-9
+STATUS = {
+    0: "optimal",
+    1: "infeasible",
+    2: "unbounded",
+    3: "iteration_limit",
+    4: "degenerate",  # zero-level artificial left basic after phase 1; the
+    # batched path skips the NumPy solver's drive-out pivots (they cost ~m
+    # full-tableau passes for a case that essentially never occurs on
+    # schedule LPs), so such elements are flagged for the serial fallback
+    # instead of being silently mis-solved
+}
+
+_RUNNING, _OPTIMAL, _UNBOUNDED, _ITER_LIMIT = -1, 0, 2, 3
+
+
+@dataclasses.dataclass
+class BatchedSimplexResult:
+    x: np.ndarray  # [B, n]
+    objective: np.ndarray  # [B]
+    status: np.ndarray  # [B] int — see STATUS
+    iterations: np.ndarray  # [B] int
+
+    @property
+    def ok(self) -> np.ndarray:
+        return self.status == 0
+
+    def status_str(self, b: int) -> str:
+        return STATUS[int(self.status[b])]
+
+
+def _equilibrate(A, b, c, iters=3):
+    """Ruiz scaling toward unit max-magnitudes (same as core.simplex); the
+    iteration count is static so this unrolls into a few fused passes."""
+    col = jnp.ones(A.shape[1])
+    for _ in range(iters):
+        rmax = jnp.max(jnp.abs(A), axis=1, initial=0.0)
+        r = 1.0 / jnp.sqrt(jnp.where(rmax > 0, rmax, 1.0))
+        A = A * r[:, None]
+        b = b * r
+        cmax = jnp.max(jnp.abs(A), axis=0, initial=0.0)
+        s = 1.0 / jnp.sqrt(jnp.where(cmax > 0, cmax, 1.0))
+        A = A * s[None, :]
+        col = col * s
+    return A, b, c * col, col
+
+
+def _fused_pivot(T, row, col, do_pivot):
+    """One-pass masked pivot: returns T after pivoting on (row, col).
+
+    ``prow = T[row]/piv`` and ``pcol`` holds the entering column with the
+    pivot entry replaced by ``piv - 1``, so ``T - outer(pcol, prow)`` both
+    eliminates the column and rescales the pivot row:
+    ``T[row] - (piv-1) * T[row]/piv = T[row]/piv``.
+    """
+    piv = jnp.where(do_pivot, T[row, col], 1.0)
+    prow = T[row] / piv
+    pcol = T[:, col].at[row].set(piv - 1.0)
+    pcol = jnp.where(do_pivot, pcol, 0.0)
+    return T - jnp.outer(pcol, prow)
+
+
+def _phase(T, basis, ncols_price, max_iter, bland_after):
+    """Run simplex pivots on tableau T until optimal/unbounded/limit."""
+
+    def cond(carry):
+        _, _, it, status = carry
+        return (status == _RUNNING) & (it < max_iter)
+
+    def body(carry):
+        T, basis, it, status = carry
+        obj = T[-1, :ncols_price]
+        neg = obj < -_EPS
+        any_neg = jnp.any(neg)
+        dantzig = jnp.argmin(obj)
+        bland = jnp.argmin(jnp.where(neg, jnp.arange(ncols_price), ncols_price))
+        col = jnp.where(it < bland_after, dantzig, bland)
+
+        colvals = T[:-1, col]
+        pos = colvals > _EPS
+        ratios = jnp.where(pos, T[:-1, -1] / jnp.where(pos, colvals, 1.0), jnp.inf)
+        best = ratios[jnp.argmin(ratios)]
+        unbounded = ~jnp.isfinite(best)
+        # tie-break on the smallest basis index (same rule as the NumPy solver)
+        ties = jnp.abs(ratios - best) <= 1e-12
+        row = jnp.argmin(jnp.where(ties, basis, jnp.iinfo(jnp.int32).max))
+
+        do_pivot = any_neg & ~unbounded
+        T = _fused_pivot(T, row, col, do_pivot)
+        basis = jnp.where(do_pivot, basis.at[row].set(col), basis)
+
+        status = jnp.where(
+            ~any_neg,
+            jnp.int32(_OPTIMAL),
+            jnp.where(unbounded, jnp.int32(_UNBOUNDED), jnp.int32(_RUNNING)),
+        )
+        it = it + jnp.where(do_pivot, jnp.int32(1), jnp.int32(0))
+        return T, basis, it, status
+
+    T, basis, it, status = lax.while_loop(
+        cond, body, (T, basis, jnp.int32(0), jnp.int32(_RUNNING))
+    )
+    status = jnp.where(status == _RUNNING, jnp.int32(_ITER_LIMIT), status)
+    return T, basis, it, status
+
+
+def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
+    n = c.shape[0]
+    m_ub, m_eq = A_ub.shape[0], A_eq.shape[0]
+    m_rows = m_ub + m_eq
+
+    A = jnp.concatenate([A_ub, A_eq], axis=0) if m_rows else jnp.zeros((0, n))
+    b = jnp.concatenate([b_ub, b_eq])
+    c_orig = c
+    A, b, c, col_scale = _equilibrate(A, b, c)
+    neg = b < 0
+    A = jnp.where(neg[:, None], -A, A)
+    b = jnp.abs(b)
+    # slack for <= rows: +1, flipped to -1 when the row was negated; eq rows: 0
+    slack_sign = jnp.concatenate([jnp.ones(m_ub), jnp.zeros(m_eq)])
+    slack_sign = jnp.where(neg, -slack_sign, slack_sign)
+
+    n_slack = m_ub
+    dummy = n + n_slack  # the inert zero column artificials retire onto
+    # columns: [structural | slack | dummy | rhs]
+    T = jnp.zeros((m_rows + 1, dummy + 2))
+    T = T.at[:m_rows, :n].set(A)
+    T = T.at[:m_rows, -1].set(b)
+    rows = jnp.arange(m_rows)
+    T = T.at[rows[:m_ub], n + rows[:m_ub]].set(slack_sign[:m_ub])
+    # initial basis: the +1 slack where the row kept one, else an (implicit)
+    # artificial — ids `dummy + 1 + r`, one per row, ordered like the rows so
+    # the ratio test's basis-index tie-break matches the NumPy solver
+    can_slack = jnp.concatenate([~neg[:m_ub], jnp.zeros(m_eq, dtype=bool)])
+    basis = jnp.where(can_slack, n + rows, dummy + 1 + rows)
+
+    bland_after = max(200, 4 * (m_rows + 1))
+
+    # ---- phase 1: minimize the sum of (implicit) artificials ----
+    # pricing out the basic artificials leaves obj = -sum of their rows; the
+    # artificial columns themselves are never read again (no re-entry rule)
+    art_basic = ~can_slack
+    T = T.at[-1].set(-jnp.sum(jnp.where(art_basic[:, None], T[:m_rows], 0.0), axis=0))
+    T, basis, it1, st1 = _phase(T, basis, dummy, max_iter, bland_after)
+    infeasible = (st1 == _OPTIMAL) & (T[-1, -1] < -1e-7)
+
+    # Zero-level artificials left basic after phase 1: the NumPy solver
+    # drives them out with up to m_rows extra pivots.  Rows whose structural
+    # and slack entries are all zero are redundant constraints — inert under
+    # further pivots — and retire safely onto the dummy column.  A *drivable*
+    # leftover (nonzero entries) is a degenerate corner that could go unsound
+    # if a later pivot pushed its implicit artificial positive, so those
+    # elements are flagged (status 4) and handed to the serial fallback
+    # rather than paying the drive-out passes batch-wide.
+    is_art = basis > dummy
+    zero_level = jnp.abs(T[:m_rows, -1]) <= 1e-9
+    has_entries = jnp.any(jnp.abs(T[:m_rows, :dummy]) > 1e-9, axis=1)
+    drivable_leftover = jnp.any(is_art & zero_level & has_entries)
+    basis = jnp.where(is_art, dummy, basis)
+
+    # ---- phase 2: the user objective on the same tableau ----
+    T = T.at[-1].set(0.0)
+    T = T.at[-1, :n].set(c)
+    # price out basic variables: obj -= sum_r obj[basis[r]] * T[r]
+    coeff = T[-1][basis]  # [m_rows]  (0 for dummy-basic rows)
+    T = T.at[-1].add(-coeff @ T[:m_rows])
+    T, basis, it2, st2 = _phase(T, basis, dummy, max_iter, bland_after)
+
+    xfull = jnp.zeros(dummy + 1).at[basis].set(T[:m_rows, -1])
+    x = col_scale * xfull[:n]  # undo column scaling
+    obj = c_orig @ x
+    status = jnp.where(
+        infeasible,
+        jnp.int32(1),
+        jnp.where(st1 != _OPTIMAL, st1.astype(jnp.int32), st2.astype(jnp.int32)),
+    )
+    status = jnp.where((status == _OPTIMAL) & drivable_leftover, jnp.int32(4), status)
+    bad = (status == 1) | (status == 4)
+    x = jnp.where(bad, jnp.nan, x)
+    obj = jnp.where(bad, jnp.nan, obj)
+    return x, obj, status, it1 + it2
+
+
+@partial(jax.jit, static_argnums=(5,))
+def _solve_batch(c, A_ub, b_ub, A_eq, b_eq, max_iter):
+    return jax.vmap(_solve_one, in_axes=(0, 0, 0, 0, 0, None))(
+        c, A_ub, b_ub, A_eq, b_eq, max_iter
+    )
+
+
+def solve_simplex_batched(
+    c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, max_iter: int = 20_000
+) -> BatchedSimplexResult:
+    """Solve a batch of LPs of identical shape.
+
+    Arguments are batched along axis 0: c [B, n], A_ub [B, mu, n], b_ub
+    [B, mu], A_eq [B, me, n], b_eq [B, me]; pass None for absent families.
+    """
+    c = np.asarray(c, dtype=np.float64)
+    B, n = c.shape
+    A_ub = np.zeros((B, 0, n)) if A_ub is None else np.asarray(A_ub, dtype=np.float64)
+    b_ub = np.zeros((B, 0)) if b_ub is None else np.asarray(b_ub, dtype=np.float64)
+    A_eq = np.zeros((B, 0, n)) if A_eq is None else np.asarray(A_eq, dtype=np.float64)
+    b_eq = np.zeros((B, 0)) if b_eq is None else np.asarray(b_eq, dtype=np.float64)
+    if A_ub.shape[0] != B or A_eq.shape[0] != B:
+        raise ValueError("batch dims disagree")
+    with enable_x64():
+        x, obj, status, iters = _solve_batch(
+            jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
+            jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
+        )
+        return BatchedSimplexResult(
+            x=np.asarray(x),
+            objective=np.asarray(obj),
+            status=np.asarray(status),
+            iterations=np.asarray(iters),
+        )

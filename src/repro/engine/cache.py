@@ -1,0 +1,99 @@
+"""Solution cache: content-addressed storage of solved schedules.
+
+Instances are hashed after quantization (relative rounding to
+``quantum`` ~ 1e-9) so replans triggered by bit-identical — or merely
+indistinguishable — platform states hit the cache instead of the solver.
+The cache stores only the *decision* (the gamma fractions and the LP
+objective); schedules are re-materialized by an ASAP replay, which is exact
+and cheap, so a hit returns the same executable schedule the solver would.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.instance import Instance
+
+__all__ = ["instance_key", "CachedSolution", "SolutionCache"]
+
+
+def _quantize(a: np.ndarray, quantum: float) -> np.ndarray:
+    """Relative quantization: keep ~|log10 quantum| significant digits."""
+    a = np.asarray(a, dtype=np.float64)
+    if a.size == 0:
+        return a
+    scale = np.maximum(np.abs(a), 1e-300)
+    mag = 10.0 ** np.floor(np.log10(scale))
+    return np.round(a / (mag * quantum)) * (mag * quantum)
+
+
+def instance_key(inst: Instance, objective: str = "makespan", quantum: float = 1e-9) -> str:
+    """Stable content hash of a quantized instance (+ objective)."""
+    h = hashlib.sha256()
+    h.update(f"{objective}|m={inst.m}|N={inst.N}|q={inst.q}".encode())
+    for arr in (
+        inst.chain.w,
+        inst.chain.z,
+        inst.chain.tau,
+        inst.chain.latency,
+        inst.loads.v_comm,
+        inst.loads.v_comp,
+        inst.loads.release,
+        inst.w_per_load if inst.w_per_load is not None else np.zeros(0),
+    ):
+        h.update(_quantize(arr, quantum).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class CachedSolution:
+    gamma: np.ndarray  # [m, T]
+    lp_makespan: float
+    backend: str
+
+
+class SolutionCache:
+    """A bounded LRU mapping quantized-instance hashes to solved fractions."""
+
+    def __init__(self, max_entries: int = 65536, quantum: float = 1e-9):
+        self.max_entries = max_entries
+        self.quantum = quantum
+        self._store: dict[str, CachedSolution] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def key(self, inst: Instance, objective: str = "makespan") -> str:
+        return instance_key(inst, objective=objective, quantum=self.quantum)
+
+    def get(self, key: str) -> CachedSolution | None:
+        sol = self._store.get(key)
+        if sol is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        # LRU touch: re-insert to the dict tail (dicts are insertion-ordered)
+        del self._store[key]
+        self._store[key] = sol
+        return sol
+
+    def put(self, key: str, sol: CachedSolution) -> None:
+        if key in self._store:
+            del self._store[key]
+        self._store[key] = sol
+        while len(self._store) > self.max_entries:
+            self._store.pop(next(iter(self._store)))
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._store),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+        }

@@ -1,0 +1,207 @@
+"""Plan service: the engine's front door.
+
+``solve_bulk`` evaluates a whole population of instances:
+
+  1. cache lookup on the quantized-instance hash (hits replay instantly);
+  2. misses are packed into exact ``(m, T, q)`` buckets (arena.py), their
+     Fig.-6 LPs stacked (rows zero-padded to the bucket max — a ``0.x <= 0``
+     row is inert) and solved by the batched simplex in one ``vmap``;
+  3. every solved gamma batch is ASAP-replayed through the batched simulator
+     (the same replay-validation contract as ``repro.core.solver.solve``);
+  4. any batch element the batched path could not certify (non-optimal
+     status, or replay exceeding the LP objective beyond tolerance) falls
+     back to the serial NumPy solver — the engine is an accelerator, never a
+     correctness compromise.
+
+``PlanService`` wraps this in a submit/flush request queue for serving
+call-sites (launch/serve.py --plan, runtime replans).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.instance import Instance
+from repro.core.schedule import Schedule
+from repro.core.simulator import simulate
+from repro.core.solver import LPResult, solve
+
+from .arena import InstanceArena
+from .batched_lp import build_lp_bucket
+from .batched_sim import simulate_bucket
+from .batched_simplex import solve_simplex_batched
+from .cache import CachedSolution, SolutionCache
+
+__all__ = ["solve_bulk", "PlanService"]
+
+_REPLAY_TOL = 1e-6
+
+
+def _result_from_gamma(
+    inst: Instance, gamma: np.ndarray, lp_makespan: float, backend: str,
+    sched: Schedule | None = None,
+) -> LPResult:
+    if sched is None:
+        sched = simulate(inst, gamma)
+    return LPResult(
+        schedule=sched,
+        lp_makespan=float(lp_makespan),
+        objective_value=float(sched.makespan),
+        backend=backend,
+        status="optimal",
+        n_vars=-1,
+        n_rows=-1,
+    )
+
+
+def solve_bulk(
+    instances: list,
+    objective: str = "makespan",
+    cache: SolutionCache | None = None,
+    fallback: bool = True,
+) -> list:
+    """Solve many instances at once; returns ``LPResult``s in caller order.
+
+    Only the paper's makespan objective runs on the batched path; other
+    objectives delegate to the serial solver per instance.
+    """
+    if objective != "makespan":
+        return [solve(inst, objective=objective) for inst in instances]
+
+    results: list = [None] * len(instances)
+    keys: list = [None] * len(instances)
+    pending: list[int] = []
+    for i, inst in enumerate(instances):
+        if cache is not None:
+            keys[i] = cache.key(inst, objective)
+            sol = cache.get(keys[i])
+            if sol is not None:
+                results[i] = _result_from_gamma(
+                    inst, sol.gamma, sol.lp_makespan, "batched+cache"
+                )
+                continue
+        pending.append(i)
+    if not pending:
+        return results
+
+    arena = InstanceArena([instances[i] for i in pending], pad_shapes=False)
+    for bucket in arena.buckets:
+        B = bucket.B
+        lp = build_lp_bucket(bucket)
+        c = np.tile(lp.c, (B, 1))  # objective pattern is bucket-constant
+
+        res = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+
+        gammas = lp.gamma_of(res.x)
+        lp_mks = lp.makespan_of(res.x)
+
+        # replay every solved gamma through the batched ASAP simulator
+        cs, ce, ps, pe, mk = simulate_bucket(bucket, bucket.gamma_padded(list(gammas)))
+
+        for b in range(B):
+            gi = pending[bucket.indices[b]]
+            inst = bucket.instances[b]
+            certified = (
+                res.status[b] == 0
+                and np.isfinite(lp_mks[b])
+                and mk[b] <= lp_mks[b] * (1 + _REPLAY_TOL) + 1e-9
+            )
+            if not certified:
+                if not fallback:
+                    raise RuntimeError(
+                        f"batched solve failed for instance {gi}: "
+                        f"status={res.status_str(b)} replay={mk[b]} lp={lp_mks[b]}"
+                    )
+                results[gi] = solve(inst, objective="makespan")
+                if cache is not None and results[gi].ok:
+                    cache.put(keys[gi], CachedSolution(
+                        gamma=results[gi].schedule.gamma,
+                        lp_makespan=results[gi].lp_makespan,
+                        backend="serial",
+                    ))
+                continue
+            sched = Schedule(
+                instance=inst,
+                gamma=gammas[b],
+                comm_start=cs[b],
+                comm_end=ce[b],
+                comp_start=ps[b],
+                comp_end=pe[b],
+                makespan=float(mk[b]),
+            )
+            results[gi] = _result_from_gamma(
+                inst, gammas[b], lp_mks[b], "batched", sched=sched
+            )
+            if cache is not None:
+                cache.put(keys[gi], CachedSolution(
+                    gamma=gammas[b], lp_makespan=float(lp_mks[b]), backend="batched"
+                ))
+    return results
+
+
+@dataclasses.dataclass
+class _Ticket:
+    index: int
+
+
+class PlanService:
+    """Batching request front-end over :func:`solve_bulk`.
+
+    Call sites ``submit`` instances as they arrive and ``flush`` once per
+    scheduling tick; the service coalesces everything submitted since the
+    last flush into one bulk solve (cache-first).
+    """
+
+    def __init__(
+        self,
+        cache: SolutionCache | None = None,
+        objective: str = "makespan",
+        max_results: int = 65536,
+    ):
+        self.cache = cache if cache is not None else SolutionCache()
+        self.objective = objective
+        self.max_results = max_results
+        self._queue: list[Instance] = []
+        self._results: list = []
+        self._base = 0  # absolute ticket index of _results[0]
+
+    def submit(self, inst: Instance) -> _Ticket:
+        self._queue.append(inst)
+        return _Ticket(index=self._base + len(self._results) + len(self._queue) - 1)
+
+    def flush(self) -> list:
+        """Solve everything queued; returns the new results (queue order)."""
+        if not self._queue:
+            return []
+        batch, self._queue = self._queue, []
+        res = solve_bulk(batch, objective=self.objective, cache=self.cache)
+        self._results.extend(res)
+        # bound retained results so a long-running serving loop cannot grow
+        # without limit; tickets older than the window raise in result()
+        excess = len(self._results) - self.max_results
+        if excess > 0:
+            del self._results[:excess]
+            self._base += excess
+        return res
+
+    def result(self, ticket: _Ticket):
+        if ticket.index >= self._base + len(self._results):
+            self.flush()
+        if ticket.index < self._base:
+            raise KeyError(
+                f"ticket {ticket.index} evicted (retention window "
+                f"{self.max_results}); read results at flush() time instead"
+            )
+        return self._results[ticket.index - self._base]
+
+    def solve_many(self, instances: list) -> list:
+        """One-shot convenience: bulk solve in caller order (flushes any
+        previously submitted work too)."""
+        for inst in instances:
+            self.submit(inst)
+        return self.flush()[-len(instances):] if instances else []
+
+    def stats(self) -> dict:
+        return self.cache.stats()

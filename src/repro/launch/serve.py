@@ -84,7 +84,11 @@ def main(argv=None):
     if args.plan:
         # DLT multi-load plan: N request batches over a heterogeneous 4-stage
         # chain, speeds scaled to the workload (a batch ~50ms/stage, transfer
-        # ~15ms) so the schedule is non-trivial
+        # ~15ms) so the schedule is non-trivial.  Replans route through the
+        # engine's plan service: the solve itself is batched, and a second
+        # identical planning tick (the common serving case) hits the cache.
+        from repro.engine import PlanService
+
         fl = decode_flops_per_token(cfg, args.prompt_len) * args.gen_len
         base_speed = fl * args.batch / 0.05
         base_bw = 4.0 * args.prompt_len * args.batch / 0.015
@@ -92,12 +96,20 @@ def main(argv=None):
         links = [LinkSpec(base_bw, 50e-6)] * 3
         loads = [BatchSpec(num_samples=args.batch, bytes_per_sample=4.0 * args.prompt_len,
                            flops_per_sample=fl) for _ in range(args.plan)]
-        plan = Planner(stages, links).plan(loads, q=2)
+        service = PlanService()
+        planner = Planner(stages, links, cache=service.cache)
+        plan = planner.plan(loads, q=2, backend="batched")
         print(f"DLT plan for {args.plan} request batches over 4 stages: "
-              f"makespan={plan.makespan * 1e3:.3f}ms")
+              f"makespan={plan.makespan * 1e3:.3f}ms "
+              f"(backend={plan.result.backend})")
         for t, (n, j) in enumerate(plan.cells):
             print(f"  load {n} installment {j}: "
                   f"requests/stage={[int(x) for x in plan.samples[t]]}")
+        # a replanning tick with an unchanged platform state: pure cache hit
+        plan2 = planner.plan(loads, q=2, backend="batched")
+        st = service.stats()
+        print(f"replan tick: makespan={plan2.makespan * 1e3:.3f}ms "
+              f"cache={st['hits']} hit / {st['misses']} miss")
 
 
 if __name__ == "__main__":

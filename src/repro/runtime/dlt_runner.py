@@ -25,15 +25,86 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level export, replication check renamed to check_vma
+    from jax import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_vma": False}
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ArchConfig, ShardingPolicy, TrainConfig
-from repro.core.planner import DLTPlan
+from repro.core.planner import DLTPlan, Planner
 from repro.models import loss_fn
 from repro.optim import adamw_update, cosine_lr
 
-__all__ = ["stage_batches", "make_dlt_train_step"]
+__all__ = ["stage_batches", "make_dlt_train_step", "ChainReplanner"]
+
+
+class ChainReplanner:
+    """Online replanning for a running chain, routed through the engine.
+
+    Owns a :class:`repro.core.planner.Planner` plus an engine solution cache
+    (repro.engine): every replan — straggler drift, stage failure, or a bulk
+    what-if sweep — goes through the batched solver, and platform states the
+    chain has seen before replay from the cache instead of re-solving.
+    """
+
+    def __init__(self, planner: Planner, q: int | list = 2):
+        from repro.engine.cache import SolutionCache
+
+        self.planner = planner
+        self.q = q
+        if self.planner._cache is None:
+            self.planner._cache = SolutionCache()
+
+    def replan(self, batches: list) -> DLTPlan:
+        return self.planner.plan(batches, q=self.q, backend="batched")
+
+    def observe(self, stage: int, achieved_flops_per_sec: float, batches: list):
+        """EWMA speed feedback; returns a fresh plan when drift demands one."""
+        if self.planner.observe_step_time(stage, achieved_flops_per_sec):
+            return self.replan(batches)
+        return None
+
+    def on_failure(self, dead: int, batches: list, restore_delay: float = 0.0):
+        """Stage loss: fuse links, carry the cache over, batched re-solve."""
+        p2, plan = self.planner.replan_without_stage(
+            dead, batches, restore_delay=restore_delay, q=self.q, backend="batched"
+        )
+        self.planner = p2
+        return plan
+
+    def what_if_speeds(self, batches: list, speed_scales) -> np.ndarray:
+        """Straggler sensitivity: predicted makespan per speed scenario.
+
+        ``speed_scales`` is [S, m] multipliers on the stages' effective
+        FLOP/s; all S hypothetical instances solve in one engine batch.
+        Returns the S predicted makespans.
+        """
+        import dataclasses as _dc
+
+        from repro.core.solver import solve_batch
+
+        insts = []
+        m = len(self.planner.stages)
+        for scales in np.atleast_2d(np.asarray(speed_scales, dtype=np.float64)):
+            if scales.shape != (m,):
+                raise ValueError(
+                    f"speed_scales rows must have one entry per stage ({m}), "
+                    f"got {scales.shape}"
+                )
+            stages = [
+                _dc.replace(s, flops_per_sec=s.flops_per_sec * float(f))
+                for s, f in zip(self.planner.stages, scales)
+            ]
+            p = Planner(stages, self.planner.links, ewma=self.planner.ewma)
+            insts.append(p.to_instance(batches, q=self.q))
+        results = solve_batch(insts, backend="batched", cache=self.planner._cache)
+        return np.array([r.makespan for r in results])
 
 
 def stage_batches(plan: DLTPlan, batches: list, n_stages: int):
@@ -116,12 +187,12 @@ def make_dlt_train_step(
 
     param_spec = P()  # replicated across the stage axis (DP chain)
 
-    smapped = shard_map(
+    smapped = _shard_map(
         chain_loss,
         mesh=mesh,
         in_specs=(param_spec, P(), P(), P()),
         out_specs=P(),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
 
     def step(state, tokens, labels, counts):

@@ -1,0 +1,99 @@
+"""The engine's serving/replanning entry points: ChainReplanner,
+Planner.plan_bulk, PlanService, and the adversary sweep fast path.
+
+test_engine_parity.py proves the engine's numerics; this module gates the
+wiring around them — the call sites a regression would otherwise ship
+through silently.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.heuristics import adversary_sweep
+from repro.core.instance import random_instance
+from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
+from repro.engine import PlanService
+from repro.runtime.dlt_runner import ChainReplanner
+
+# tiny chain: every test shares the same instance shapes so the whole module
+# compiles a handful of XLA programs once
+_STAGES = [StageSpec(f"s{i}", 1e9 * (1 + 0.3 * i)) for i in range(3)]
+_LINKS = [LinkSpec(1e8, 50e-6)] * 2
+_BATCHES = [
+    BatchSpec(num_samples=64, bytes_per_sample=4096, flops_per_sample=1e7)
+    for _ in range(2)
+]
+
+
+def _planner():
+    return Planner(list(_STAGES), list(_LINKS))
+
+
+def test_plan_backend_batched_matches_serial():
+    serial = _planner().plan(_BATCHES, q=2, backend="auto")
+    batched = _planner().plan(_BATCHES, q=2, backend="batched")
+    assert batched.result.backend.startswith("batched")
+    assert batched.makespan == pytest.approx(serial.makespan, rel=1e-9)
+    assert [list(s) for s in batched.samples] == [list(s) for s in serial.samples]
+
+
+def test_plan_bulk_matches_per_scenario_plans():
+    p = _planner()
+    scenarios = [_BATCHES, _BATCHES[:1]]
+    plans = p.plan_bulk(scenarios, q=2)
+    for sc, plan in zip(scenarios, plans):
+        ref = _planner().plan(sc, q=2, backend="auto")
+        assert plan.makespan == pytest.approx(ref.makespan, rel=1e-9)
+
+
+def test_chain_replanner_lifecycle():
+    rp = ChainReplanner(_planner(), q=2)
+    plan = rp.replan(_BATCHES)
+    assert plan.result.backend.startswith("batched")
+    # same platform state on the next tick: must be a cache hit
+    again = rp.replan(_BATCHES)
+    assert again.result.backend == "batched+cache"
+    assert again.makespan == pytest.approx(plan.makespan, abs=1e-9)
+    # losing a stage fuses the links and still re-solves through the engine
+    plan2 = rp.on_failure(1, _BATCHES, restore_delay=0.01)
+    assert len(rp.planner.stages) == len(_STAGES) - 1
+    assert plan2.makespan > 0
+
+    # no-drift observation returns None; a big drift triggers a fresh plan
+    rp2 = ChainReplanner(_planner(), q=2)
+    rp2.replan(_BATCHES)
+    assert rp2.observe(0, _STAGES[0].flops_per_sec, _BATCHES) is None
+    assert rp2.observe(0, _STAGES[0].flops_per_sec * 0.2, _BATCHES) is not None
+
+
+def test_what_if_speeds_orders_scenarios_and_validates_shape():
+    rp = ChainReplanner(_planner(), q=2)
+    mks = rp.what_if_speeds(_BATCHES, [[1.0, 1.0, 1.0], [0.25, 1.0, 1.0]])
+    assert mks.shape == (2,)
+    assert mks[1] > mks[0]  # slowing a stage can only hurt
+    with pytest.raises(ValueError):  # wrong row length must not zip-truncate
+        rp.what_if_speeds(_BATCHES, [[1.0, 1.0]])
+
+
+def test_plan_service_bounded_retention():
+    rng = np.random.default_rng(0)
+    svc = PlanService(max_results=4)
+    insts = [random_instance(rng, m=3, n_loads=2, q=1) for _ in range(6)]
+    tickets = [svc.submit(i) for i in insts]
+    res = svc.flush()
+    assert len(res) == 6
+    assert svc.result(tickets[-1]).ok  # recent tickets stay addressable
+    with pytest.raises(KeyError):  # old ones are evicted, loudly
+        svc.result(tickets[0])
+
+
+def test_adversary_sweep_batched_matches_serial_simulator():
+    rng = np.random.default_rng(1)
+    insts = [random_instance(rng, m=3, n_loads=2, q=1) for _ in range(8)]
+    batched = adversary_sweep(insts, simulator="batched")
+    serial = adversary_sweep(insts, simulator="serial")
+    assert set(batched) == set(serial)
+    for name in batched:
+        ok = np.isfinite(serial[name])
+        assert (np.isfinite(batched[name]) == ok).all()
+        np.testing.assert_allclose(batched[name][ok], serial[name][ok], atol=1e-9)

@@ -13,6 +13,8 @@ Invariants:
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # every test here is property-based
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

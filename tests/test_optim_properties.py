@@ -1,0 +1,25 @@
+"""Hypothesis property tests for gradient compression (split from
+test_optim.py so the deterministic optimizer tests collect without
+hypothesis)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.optim.compress import int8_compress, int8_decompress
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64))
+def test_int8_roundtrip_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, scale = int8_compress(x)
+    back = int8_decompress(q, scale)
+    # linear quantization error <= scale/2 per element
+    assert float(jnp.abs(back - x).max()) <= float(scale) / 2 + 1e-6
+    assert q.dtype == jnp.int8
