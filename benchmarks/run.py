@@ -17,9 +17,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from . import (bench_kernels, bench_latency_qstar, bench_lp_scaling,
-                   bench_motivating_example, bench_table2, bench_theorem1,
-                   roofline)
+    from . import (bench_engine_throughput, bench_kernels, bench_latency_qstar,
+                   bench_lp_scaling, bench_motivating_example, bench_table2,
+                   bench_theorem1, roofline)
 
     benches = {
         "motivating_example": bench_motivating_example.main,
@@ -28,6 +28,7 @@ def main(argv=None) -> int:
         "latency_qstar": bench_latency_qstar.main,
         "lp_scaling": bench_lp_scaling.main,
         "kernels": bench_kernels.main,
+        "engine_throughput": bench_engine_throughput.main,
         "roofline_single": lambda quick: roofline.main(quick, mesh="single"),
         "roofline_multi": lambda quick: roofline.main(quick, mesh="multi"),
     }

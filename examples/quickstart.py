@@ -1,11 +1,13 @@
 """Quickstart: the paper's contribution in one page.
 
 1. Build the §3 motivating instance (2 processors, 2 loads, lambda=3/4).
-2. Solve it optimally with the Fig. 6 linear program (Q=2 installments).
+2. Solve it optimally with the Fig. 6 linear program (Q=2 installments) —
+   through the solver-backend registry, with any registered backend.
 3. Compare against the Wong-Veeravalli-Barlas heuristics it supersedes.
 4. Use the same planner to schedule training batches for a real (smoke-size)
-   model on a heterogeneous 3-stage chain, and run one training step per plan
-   cell on CPU.
+   model on a heterogeneous 3-stage chain, let `plan_auto_T` pick the
+   installment count under a fixed per-installment cost (the practical
+   Theorem-1 chooser), and run one training step per plan cell on CPU.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ShardingPolicy, TrainConfig, get_arch, smoke_variant
+from repro.core import SolveRequest, available_backends, get_backend
 from repro.core.closed_form import example_instance
 from repro.core.heuristics import multi_inst, simple, single_inst
 from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
@@ -25,9 +28,15 @@ from repro.runtime import make_train_state, make_train_step
 # ---------------------------------------------------------------------- 1+2+3
 print("=== the paper's example: 2 identical processors, lambda = 3/4 ===")
 inst = example_instance(0.75, q=2)
-lp = solve(inst)
+lp = solve(inst)  # the classic shim: routes through the "auto" backend
 print(f"LP (Fig. 6, Q=2 installments): makespan = {lp.makespan:.6f}"
       f"  (paper's hand schedule: 781/653 * 3/4 = {781 / 653 * 0.75:.6f})")
+
+# the same solve, stated as a request against any registered backend
+print(f"registered solver backends: {available_backends()}")
+report = get_backend("simplex").solve(SolveRequest(instance=inst))
+print(f"simplex backend agrees: makespan = {report.makespan:.6f} "
+      f"(status={report.status})")
 for name, fn in [("SIMPLE", simple), ("SINGLEINST", single_inst),
                  ("MULTIINST", lambda i: multi_inst(i, cap=300))]:
     r = fn(example_instance(0.75))
@@ -50,8 +59,18 @@ stages = [StageSpec("pod0", speed), StageSpec("pod1", speed / 2),
           StageSpec("pod2", speed / 3)]
 links = [LinkSpec(bytes_per_sec=load.bytes_per_sample * B / 0.01, startup_sec=1e-4)] * 2
 planner = Planner(stages, links)
-plan = planner.plan([load, load], q=2)  # 2 loads x 2 installments
-print(f"planned makespan: {plan.makespan * 1e3:.2f} ms")
+# let the cost-aware Theorem-1 sweep pick the installment count: each
+# installment is charged a fixed overhead (launch/bookkeeping), so unlike
+# the pure linear model the optimum T* is finite
+auto = planner.plan_auto_T([load, load], t_max=4, installment_cost=2e-4,
+                           backend="serial")
+print("auto-T sweep (0.2ms/installment): "
+      + ", ".join(f"q={q}: {auto.makespans[q] * 1e3:.2f}ms"
+                  for q in sorted(auto.makespans))
+      + f" -> T* = {auto.t_star}")
+plan = auto.plan
+print(f"planned makespan: {plan.makespan * 1e3:.2f} ms "
+      f"(T* = {auto.t_star} installments/load)")
 for t, (n, j) in enumerate(plan.cells):
     print(f"  load {n}, installment {j}: samples/stage = "
           f"{[int(x) for x in plan.samples[t]]}")

@@ -24,13 +24,25 @@ from .heuristics import (
     single_inst,
     single_load,
 )
+from .backends import (
+    AutoBackend,
+    LPResult,
+    ScipyBackend,
+    SimplexBackend,
+    SolveReport,
+    SolveRequest,
+    SolverBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from .instance import Chain, Instance, Loads, random_instance
 from .lp import ScheduleLP, build_lp, extract_schedule
-from .planner import BatchSpec, DLTPlan, LinkSpec, Planner, StageSpec
+from .planner import AutoTResult, BatchSpec, DLTPlan, LinkSpec, Planner, StageSpec
 from .schedule import Schedule, check_feasible
 from .simplex import SimplexResult, solve_simplex
 from .simulator import simulate
-from .solver import LPResult, lower_bound, solve, solve_batch
+from .solver import lower_bound, solve, solve_batch
 from .theory import QStarResult, optimal_installments, q_monotonicity
 
 __all__ = [
@@ -47,6 +59,15 @@ __all__ = [
     "SimplexResult",
     "solve_simplex",
     "LPResult",
+    "SolveRequest",
+    "SolveReport",
+    "SolverBackend",
+    "SimplexBackend",
+    "ScipyBackend",
+    "AutoBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
     "solve",
     "solve_batch",
     "lower_bound",
@@ -55,6 +76,7 @@ __all__ = [
     "LinkSpec",
     "Planner",
     "StageSpec",
+    "AutoTResult",
     "HeuristicResult",
     "simple",
     "single_load",

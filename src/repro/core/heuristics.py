@@ -41,6 +41,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.lpir import EqualFinishView, elide_dead_rows, emit_schedule_ir, lower_dense
+
 from .instance import Instance
 from .schedule import Schedule
 from .simplex import solve_simplex
@@ -141,87 +143,27 @@ def _equal_finish_load(
 ) -> np.ndarray | None:
     """Fractions for load ``n`` s.t. all participants finish simultaneously,
     minimizing that common finish time given the platform state.  Returns
-    gamma [m] or None if the tiny LP fails (should not happen)."""
-    m = inst.m
-    part = np.ones(m, dtype=bool) if participants is None else participants
-    vcomm, vcomp = inst.loads.v_comm[n], inst.loads.v_comp[n]
-    rel = inst.loads.release[n]
-    z, K = inst.chain.z, inst.chain.latency
-    w = np.array([inst.w_of(i, n) for i in range(m)])
+    gamma [m] or None if the tiny LP fails (should not happen).
 
+    The sub-LP is the shared schedule-LP IR in equal-finish mode: one cell of
+    load ``n`` with the platform state injected as availability floors
+    (``proc_free`` -> family (10), ``link_ready`` -> family (4')) and the
+    Fig. 6 makespan family replaced by the participants' common-finish
+    equalities — see :class:`repro.lpir.EqualFinishView`.
+    """
+    m = inst.m
     if m == 1:
         return np.array([1.0])
+    part = np.ones(m, dtype=bool) if participants is None else participants
 
-    # variables: g (m), cs (m-1), ps (m), T
-    ng = m
-    ncs = m - 1
-    nps = m
-    nv = ng + ncs + nps + 1
-    g0, cs0, ps0, Ti = 0, ng, ng + ncs, ng + ncs + nps
-    c = np.zeros(nv)
-    c[Ti] = 1.0
-
-    Aub, bub, Aeq, beq = [], [], [], []
-
-    def ub(row, rhs):
-        Aub.append(row)
-        bub.append(rhs)
-
-    def eq(row, rhs):
-        Aeq.append(row)
-        beq.append(rhs)
-
-    def comm_dur_row(i):
-        """coefficients (on g) of duration of link-i message + constant."""
-        row = np.zeros(nv)
-        for k in range(i + 1, m):
-            row[g0 + k] = z[i] * vcomm
-        return row, K[i]
-
-    for i in range(m - 1):
-        # cs_i >= link_ready_i (and release for the head link)
-        row = np.zeros(nv)
-        row[cs0 + i] = -1.0
-        ub(row.copy(), -float(max(link_ready[i], rel if i == 0 else 0.0)))
-        if i >= 1:
-            # cs_i >= cs_{i-1} + dur_{i-1}
-            row = np.zeros(nv)
-            row[cs0 + i] = -1.0
-            row[cs0 + i - 1] = 1.0
-            drow, dconst = comm_dur_row(i - 1)
-            row += drow
-            ub(row, -dconst)
-    for i in range(m):
-        row = np.zeros(nv)
-        row[ps0 + i] = -1.0
-        ub(row.copy(), -float(max(proc_free[i], rel if i == 0 else 0.0)))
-        if i >= 1:
-            # ps_i >= ce_{i-1}
-            row = np.zeros(nv)
-            row[ps0 + i] = -1.0
-            row[cs0 + i - 1] = 1.0
-            drow, dconst = comm_dur_row(i - 1)
-            row += drow
-            ub(row, -dconst)
-        if part[i]:
-            # ps_i + w_i * Vp * g_i == T
-            row = np.zeros(nv)
-            row[ps0 + i] = 1.0
-            row[g0 + i] = w[i] * vcomp
-            row[Ti] = -1.0
-            eq(row, 0.0)
-        else:
-            row = np.zeros(nv)
-            row[g0 + i] = 1.0
-            eq(row, 0.0)
-    row = np.zeros(nv)
-    row[g0 : g0 + m] = 1.0
-    eq(row, 1.0)
-
-    res = solve_simplex(c, np.array(Aub), np.array(bub), np.array(Aeq), np.array(beq))
+    view = EqualFinishView(inst, n, proc_free, link_ready)
+    ir = elide_dead_rows(emit_schedule_ir(view, equal_finish=part), granularity="row")
+    c, A_ub, b_ub, A_eq, b_eq = lower_dense(ir)
+    res = solve_simplex(c, A_ub, b_ub, A_eq, b_eq)
     if not res.ok:
         return None
-    return np.maximum(res.x[g0 : g0 + m], 0.0)
+    lay = ir.layout
+    return np.maximum(res.x[lay.off_gamma : lay.off_gamma + m], 0.0)
 
 
 def _max_chunk(

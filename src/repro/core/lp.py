@@ -1,4 +1,10 @@
-"""Linear-program builder — the paper's Fig. 6, verbatim, plus §5 extensions.
+"""Serial schedule-LP builder — the sparse consumer of the shared IR.
+
+The constraint families themselves (Fig. 6 (1)-(10), the (2b)/(3b) own-port
+rows, and the §5 extensions) are emitted exactly once, in
+:mod:`repro.lpir.ir`; this module lowers that row stream to the sparse
+triplet form the serial simplex / HiGHS path consumes and keeps the
+historical :class:`ScheduleLP` container + :func:`extract_schedule` API.
 
 Variables (end-times substituted out via constraints (5)/(7), which halves the
 variable count without changing the feasible set):
@@ -12,10 +18,6 @@ variable count without changing the feasible set):
 with  comm_end(i,t) = comm_start[i,t] + K_i + z_i * V_comm(n_t) * sum_{k>i} gamma[k,t]
 and   comp_end(i,t) = comp_start[i,t] + w_i(n_t) * V_comp(n_t) * gamma[i,t].
 
-Constraint families keep the paper's numbering; (2b)/(3b) are the own-port
-serialization inequalities that the paper leaves implicit (they are implied
-for m >= 3 but necessary for m = 2 — see DESIGN.md).
-
 §5 extensions implemented: per-message affine latencies K_i, processor
 availability dates tau_i, load release dates, unrelated machines w_i^n, and
 affine objectives  sum_n alpha_n C_n + beta * makespan.
@@ -26,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+
+from repro.lpir import InstanceView, elide_dead_rows, emit_schedule_ir, lower_sparse
 
 from .instance import Instance
 from .schedule import Schedule, comm_durations, comp_durations
@@ -98,147 +102,40 @@ def build_lp(
     weights=None,
     beta: float = 0.0,
 ) -> ScheduleLP:
-    """Build the Fig. 6 LP for ``inst``.
+    """Build the Fig. 6 LP for ``inst`` (emitted via the shared IR).
 
     objective:
       "makespan"    — min makespan (the paper's objective);
       "completion"  — min sum_n weights[n] * C_n + beta * makespan (§5 affine
                       objective; default weights = 1 → average completion time).
     """
-    m = inst.m
-    cells = list(inst.cells())
-    T = len(cells)
-    n_comm = max(m - 1, 0) * T
-    n_comp = m * T
-    off_comm = 0
-    off_comp = n_comm
-    off_gamma = n_comm + n_comp
-    off_mk = off_gamma + m * T
-    want_cn = objective == "completion"
-    off_cn = off_mk + 1 if want_cn else -1
-    n_vars = off_mk + 1 + (inst.N if want_cn else 0)
-
-    lp = ScheduleLP(
-        instance=inst,
-        n_vars=n_vars,
-        c=np.zeros(n_vars),
-        ub_rows=[],
-        ub_cols=[],
-        ub_vals=[],
-        b_ub=[],
-        eq_rows=[],
-        eq_cols=[],
-        eq_vals=[],
-        b_eq=[],
-        off_comm=off_comm,
-        off_comp=off_comp,
-        off_gamma=off_gamma,
-        off_mk=off_mk,
-        off_cn=off_cn,
-        T=T,
+    ir = emit_schedule_ir(
+        InstanceView(inst), objective=objective, weights=weights, beta=beta
     )
-
-    z, K, tau = inst.chain.z, inst.chain.latency, inst.chain.tau
-    vcomm = inst.loads.v_comm
-    vcomp = inst.loads.v_comp
-    rel = inst.loads.release
-
-    def comm_end_terms(i: int, t: int):
-        """Linear terms + constant for comm_end(i, t)."""
-        n, _ = cells[t]
-        terms = [(lp.comm(i, t), 1.0)]
-        for k in range(i + 1, m):
-            terms.append((lp.gam(k, t), z[i] * vcomm[n]))
-        return terms, float(K[i])
-
-    def comp_end_terms(i: int, t: int):
-        n, _ = cells[t]
-        return [(lp.comp(i, t), 1.0), (lp.gam(i, t), inst.w_of(i, n) * vcomp[n])], 0.0
-
-    def add_ge(lhs_terms, rhs_terms, rhs_const: float):
-        """lhs >= rhs + const  ->  -(lhs) + rhs <= -const   (<= row)."""
-        r = len(lp.b_ub)
-        for v, cf in lhs_terms:
-            lp.ub_rows.append(r)
-            lp.ub_cols.append(v)
-            lp.ub_vals.append(-cf)
-        for v, cf in rhs_terms:
-            lp.ub_rows.append(r)
-            lp.ub_cols.append(v)
-            lp.ub_vals.append(cf)
-        lp.b_ub.append(-rhs_const)
-
-    for t, (n, _) in enumerate(cells):
-        for i in range(m - 1):
-            # (1) store-and-forward
-            if i >= 1:
-                rt, rc = comm_end_terms(i - 1, t)
-                add_ge([(lp.comm(i, t), 1.0)], rt, rc)
-            if t >= 1:
-                # (2b)/(3b) own-port serialization
-                rt, rc = comm_end_terms(i, t - 1)
-                add_ge([(lp.comm(i, t), 1.0)], rt, rc)
-                # (2)/(3) receive-after-forward
-                if i + 1 <= m - 2:
-                    rt, rc = comm_end_terms(i + 1, t - 1)
-                    add_ge([(lp.comm(i, t), 1.0)], rt, rc)
-            # (4) release dates (plain >=0 is a variable bound)
-            if i == 0 and rel[n] > 0:
-                add_ge([(lp.comm(0, t), 1.0)], [], float(rel[n]))
-        for i in range(m):
-            # (6) compute after the corresponding receive
-            if i >= 1:
-                rt, rc = comm_end_terms(i - 1, t)
-                add_ge([(lp.comp(i, t), 1.0)], rt, rc)
-            # (8)/(9) compute serialization
-            if t >= 1:
-                rt, rc = comp_end_terms(i, t - 1)
-                add_ge([(lp.comp(i, t), 1.0)], rt, rc)
-            # (10) availability dates
-            if t == 0 and tau[i] > 0:
-                add_ge([(lp.comp(i, 0), 1.0)], [], float(tau[i]))
-            if i == 0 and rel[n] > 0:
-                add_ge([(lp.comp(0, t), 1.0)], [], float(rel[n]))
-
-    # (12) completeness (equalities)
-    for n in range(inst.N):
-        r = len(lp.b_eq)
-        for t, (ln, _) in enumerate(cells):
-            if ln == n:
-                for i in range(m):
-                    lp.eq_rows.append(r)
-                    lp.eq_cols.append(lp.gam(i, t))
-                    lp.eq_vals.append(1.0)
-        lp.b_eq.append(1.0)
-
-    # (13) makespan >= every completion
-    for i in range(m):
-        rt, rc = comp_end_terms(i, T - 1)
-        add_ge([(off_mk, 1.0)], rt, rc)
-
-    # completion-time variables (affine objectives, §5)
-    if want_cn:
-        last_cell = {}
-        for t, (n, _) in enumerate(cells):
-            last_cell[n] = t
-        for n in range(inst.N):
-            for i in range(m):
-                rt, rc = comp_end_terms(i, last_cell[n])
-                add_ge([(off_cn + n, 1.0)], rt, rc)
-
-    # objective
-    if objective == "makespan":
-        lp.c[off_mk] = 1.0
-    elif objective == "completion":
-        w = np.ones(inst.N) if weights is None else np.asarray(weights, dtype=np.float64)
-        lp.c[off_cn : off_cn + inst.N] = w
-        lp.c[off_mk] = beta
-        if beta == 0.0:
-            # keep makespan tied down so the solution stays interpretable
-            lp.c[off_mk] = 1e-9
-    else:
-        raise ValueError(objective)
-    return lp
+    # per-row elision reproduces the historical builder exactly: a release /
+    # availability row was only ever written when its date was nonzero
+    ir = elide_dead_rows(ir, granularity="row")
+    rows = lower_sparse(ir)
+    lay = ir.layout
+    return ScheduleLP(
+        instance=inst,
+        n_vars=lay.n_vars,
+        c=ir.c,
+        ub_rows=rows.ub_rows,
+        ub_cols=rows.ub_cols,
+        ub_vals=rows.ub_vals,
+        b_ub=rows.b_ub,
+        eq_rows=rows.eq_rows,
+        eq_cols=rows.eq_cols,
+        eq_vals=rows.eq_vals,
+        b_eq=rows.b_eq,
+        off_comm=lay.off_comm,
+        off_comp=lay.off_comp,
+        off_gamma=lay.off_gamma,
+        off_mk=lay.off_mk,
+        off_cn=lay.off_cn,
+        T=lay.T,
+    )
 
 
 def extract_schedule(lp: ScheduleLP, x: np.ndarray) -> Schedule:

@@ -23,10 +23,18 @@ import dataclasses
 
 import numpy as np
 
+from .backends import SolveRequest, get_backend
 from .instance import Chain, Instance, Loads
-from .solver import LPResult, solve, solve_batch
+from .solver import LPResult
 
-__all__ = ["StageSpec", "LinkSpec", "BatchSpec", "DLTPlan", "Planner"]
+__all__ = [
+    "StageSpec",
+    "LinkSpec",
+    "BatchSpec",
+    "DLTPlan",
+    "AutoTResult",
+    "Planner",
+]
 
 
 @dataclasses.dataclass
@@ -81,6 +89,25 @@ class DLTPlan:
         )
 
 
+@dataclasses.dataclass
+class AutoTResult:
+    """Outcome of the cost-aware installment-count sweep (``plan_auto_T``).
+
+    The paper's Theorem 1 says the *linear* cost model wants infinitely many
+    installments; any real system pays a fixed per-installment overhead
+    (message startup, kernel launch, planning/bookkeeping), so the practical
+    objective is  ``makespan(T) + installment_cost * total_installments(T)``.
+    ``t_star`` minimizes that; ``plan`` is the executable winner.
+    """
+
+    plan: DLTPlan
+    t_star: int  # winning uniform installments-per-load
+    installment_cost: float
+    makespans: dict  # q -> LP-optimal makespan
+    costs: dict  # q -> makespan + installment_cost * (q * n_loads)
+    reports: list  # SolveReport per swept q, sweep order
+
+
 def _largest_remainder(frac: np.ndarray, total: int) -> np.ndarray:
     """Round fractions-of-total to integers that sum exactly to ``total``."""
     raw = frac * total
@@ -122,21 +149,24 @@ class Planner:
 
     # ---------------- planning ----------------
 
-    def plan(self, batches: list, q: int | list = 1, backend: str = "auto") -> DLTPlan:
-        """Solve one plan.  ``backend="batched"`` routes through the engine
+    def solver(self, backend="auto"):
+        """Resolve ``backend`` (registry name or instance) with this
+        planner's solution cache attached."""
+        return get_backend(backend, cache=self._cache)
+
+    def plan(self, batches: list, q: int | list = 1, backend="auto") -> DLTPlan:
+        """Solve one plan.  ``backend`` is a registry name or a
+        :class:`SolverBackend`; ``"batched"`` routes through the engine
         (repro.engine) — replans with an attached :class:`PlanService`-style
         cache hit the solution cache instead of the LP."""
         inst = self.to_instance(batches, q=q)
-        if backend == "batched":
-            res = solve_batch([inst], backend="batched", cache=self._cache)[0]
-        else:
-            res = solve(inst, backend=backend)
+        res = self.solver(backend).solve(SolveRequest(instance=inst))
         if not res.ok:
             raise RuntimeError(f"DLT LP failed: {res.status}")
         return self._plan_from_result(inst, res, batches)
 
     def plan_bulk(
-        self, scenarios: list, q: int | list = 1, backend: str = "batched"
+        self, scenarios: list, q: int | list = 1, backend="batched"
     ) -> list:
         """What-if fan-out: plan many batch-lists in one engine call.
 
@@ -146,13 +176,72 @@ class Planner:
         into :class:`DLTPlan`s.
         """
         insts = [self.to_instance(b, q=q) for b in scenarios]
-        results = solve_batch(insts, backend=backend, cache=self._cache)
+        results = self.solver(backend).solve_many(
+            [SolveRequest(instance=inst) for inst in insts]
+        )
         plans = []
         for inst, res, batches in zip(insts, results, scenarios):
             if not res.ok:
                 raise RuntimeError(f"DLT LP failed: {res.status}")
             plans.append(self._plan_from_result(inst, res, batches))
         return plans
+
+    def plan_auto_T(
+        self,
+        batches: list,
+        t_max: int = 8,
+        installment_cost: float = 0.0,
+        backend="batched",
+        qs=None,
+    ) -> AutoTResult:
+        """Pick the installment count: a batched sweep for the cost-aware T*.
+
+        Theorem 1 (paper §4) shows that under the linear cost model the
+        optimal schedule needs infinitely many installments — LP(T+1) <=
+        LP(T), always.  The *practical* chooser therefore needs a cost for
+        installments themselves: each one pays a fixed overhead
+        ``installment_cost`` (message startup beyond K_i, kernel launches,
+        per-round bookkeeping).  This sweeps uniform q = 1..t_max (or the
+        explicit ``qs`` ladder), solves every candidate in ONE bulk call —
+        each q is its own (m, T, q) bucket, so the engine compiles one shape
+        per rung and solves them all batched — and returns the executable
+        plan for
+
+            T* = argmin_q  makespan(q) + installment_cost * q * n_loads.
+
+        Ties break toward fewer installments (within 1e-12 relative).
+        """
+        qs = list(qs) if qs is not None else list(range(1, t_max + 1))
+        if not qs:
+            raise ValueError("need at least one candidate installment count")
+        insts = [self.to_instance(batches, q=q) for q in qs]
+        reports = self.solver(backend).solve_many(
+            [SolveRequest(instance=inst) for inst in insts]
+        )
+        makespans: dict[int, float] = {}
+        costs: dict[int, float] = {}
+        for q, inst, rep in zip(qs, insts, reports):
+            if not rep.ok:
+                continue
+            makespans[q] = rep.makespan
+            costs[q] = rep.makespan + installment_cost * inst.total_installments
+        if not costs:
+            raise RuntimeError(
+                f"auto-T sweep failed for every q in {qs}: "
+                f"{[r.status for r in reports]}"
+            )
+        best = min(costs.values())
+        t_star = min(q for q, cst in costs.items() if cst <= best * (1 + 1e-12) + 1e-12)
+        k = qs.index(t_star)
+        plan = self._plan_from_result(insts[k], reports[k], batches)
+        return AutoTResult(
+            plan=plan,
+            t_star=t_star,
+            installment_cost=installment_cost,
+            makespans=makespans,
+            costs=costs,
+            reports=reports,
+        )
 
     def _plan_from_result(self, inst: Instance, res: LPResult, batches: list) -> DLTPlan:
         cells = list(inst.cells())
@@ -179,7 +268,7 @@ class Planner:
         batches: list,
         restore_delay: float = 0.0,
         q: int | list = 1,
-        backend: str = "auto",
+        backend="auto",
     ) -> "tuple[Planner, DLTPlan]":
         """Drop a failed stage, fuse its links, and re-solve from scratch.
 

@@ -1,87 +1,30 @@
-"""Solver front-end: build + solve the schedule LP, replay-validate the result.
+"""Solver front-end — compatibility shims over the backend registry.
 
-Backends:
-  "simplex" — the in-tree dense two-phase simplex (repro.core.simplex);
-  "scipy"   — scipy.optimize.linprog / HiGHS (sparse), used for large instances
-              exactly as the paper used GLPK;
-  "auto"    — simplex for small LPs, scipy above a size threshold (or simplex
-              if scipy is unavailable).
+The real machinery lives in :mod:`repro.core.backends` (the
+``SolverBackend`` registry with uniform :class:`SolveRequest` /
+:class:`SolveReport` dataclasses) and, for bulk solves, in
+:mod:`repro.engine.service`.  The functions here keep the historical
+``backend="..."`` string-kwarg API alive — strings now simply name registry
+entries — so existing callers and tests keep working.
 
-Every solve is finished by an ASAP *replay* of the LP's fractions through the
-simulator: the replay is guaranteed feasible, its makespan can only be <= the
-LP objective, and at the optimum the two agree (property-tested).  The
-returned Schedule carries the replayed (executable) times.
+.. deprecated:: PR 2
+   New code should build a :class:`SolveRequest` and call
+   ``get_backend(name).solve(request)`` (or ``solve_many``) directly; the
+   string kwargs on :func:`solve` / :func:`solve_batch` are retained as
+   shims only.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
+from .backends import (  # noqa: F401  (re-exported for compatibility)
+    LPResult,
+    SolveReport,
+    SolveRequest,
+    get_backend,
+)
 from .instance import Instance
-from .lp import build_lp, extract_schedule
-from .schedule import Schedule, check_feasible
-from .simplex import solve_simplex
-from .simulator import simulate
 
-__all__ = ["LPResult", "solve", "solve_batch", "lower_bound"]
-
-_SCIPY_THRESHOLD_VARS = 120  # above this, prefer HiGHS (our dense simplex is the
-# tiny-LP fast path, the no-scipy fallback, and the cross-check oracle; Bland
-# anti-cycling gets slow on degenerate latency instances beyond ~100 vars)
-
-
-def _have_scipy() -> bool:
-    try:
-        import scipy.optimize  # noqa: F401
-
-        return True
-    except Exception:  # pragma: no cover
-        return False
-
-
-@dataclasses.dataclass
-class LPResult:
-    schedule: Schedule  # replayed, executable schedule
-    lp_makespan: float  # the LP objective value (== schedule.makespan at opt)
-    objective_value: float  # value of the requested objective
-    backend: str
-    status: str
-    n_vars: int
-    n_rows: int
-
-    @property
-    def ok(self) -> bool:
-        return self.status == "optimal"
-
-    @property
-    def makespan(self) -> float:
-        return self.schedule.makespan
-
-
-def _solve_scipy(lp) -> tuple[np.ndarray, str]:
-    from scipy.optimize import linprog
-
-    res = linprog(
-        lp.c,
-        A_ub=lp.sparse_ub() if lp.b_ub else None,
-        b_ub=np.asarray(lp.b_ub) if lp.b_ub else None,
-        A_eq=lp.sparse_eq() if lp.b_eq else None,
-        b_eq=np.asarray(lp.b_eq) if lp.b_eq else None,
-        bounds=(0, None),
-        method="highs",
-    )
-    status = "optimal" if res.status == 0 else ("infeasible" if res.status == 2 else "failed")
-    x = res.x if res.x is not None else np.full(lp.n_vars, np.nan)
-    return np.asarray(x), status
-
-
-def _solve_simplex(lp) -> tuple[np.ndarray, str]:
-    A_ub, b_ub = lp.dense_ub()
-    A_eq, b_eq = lp.dense_eq()
-    res = solve_simplex(lp.c, A_ub, b_ub, A_eq, b_eq)
-    return res.x, res.status
+__all__ = ["LPResult", "SolveRequest", "SolveReport", "solve", "solve_batch", "lower_bound"]
 
 
 def solve(
@@ -92,71 +35,21 @@ def solve(
     backend: str = "auto",
     cross_check: bool = False,
     validate: bool = True,
-) -> LPResult:
-    """Solve the optimal-schedule LP for ``inst`` (paper §4)."""
-    lp = build_lp(inst, objective=objective, weights=weights, beta=beta)
+) -> SolveReport:
+    """Solve the optimal-schedule LP for ``inst`` (paper §4).
 
-    if backend == "auto":
-        backend = (
-            "scipy" if (_have_scipy() and lp.n_vars > _SCIPY_THRESHOLD_VARS) else "simplex"
-        )
-        if backend == "simplex" and not _have_scipy():
-            pass  # simplex is always available
-
-    if backend == "scipy":
-        x, status = _solve_scipy(lp)
-    elif backend == "simplex":
-        x, status = _solve_simplex(lp)
-        if status in ("unbounded", "iteration_limit") and _have_scipy():
-            # schedule LPs are never unbounded — a non-optimal exit here is
-            # the dense simplex losing a numerical fight; HiGHS is the rescue
-            x, status = _solve_scipy(lp)
-            backend = "simplex+scipy"
-    else:
-        raise ValueError(backend)
-
-    # (skip after a scipy rescue: the dense simplex already failed once, and
-    # re-running it just burns its full iteration budget for no comparison)
-    if cross_check and _have_scipy() and status == "optimal" and backend in ("simplex", "scipy"):
-        x2, s2 = _solve_scipy(lp) if backend == "simplex" else _solve_simplex(lp)
-        if s2 == "optimal":
-            o1, o2 = float(lp.c @ x), float(lp.c @ x2)
-            scale = max(abs(o1), abs(o2), 1e-12)
-            if abs(o1 - o2) / scale > 1e-6:
-                raise AssertionError(
-                    f"backend disagreement: {backend}={o1!r} vs other={o2!r}"
-                )
-
-    if status != "optimal":
-        nan_sched = extract_schedule(lp, np.full(lp.n_vars, np.nan))
-        return LPResult(nan_sched, np.nan, np.nan, backend, status, lp.n_vars, len(lp.b_ub) + len(lp.b_eq))
-
-    sched_lp = extract_schedule(lp, x)
-    # replay the fractions ASAP -> executable schedule with tightest times
-    sched = simulate(inst, sched_lp.gamma)
-    if validate:
-        errs = check_feasible(sched, tol=1e-6)
-        if errs:
-            raise AssertionError(f"LP replay infeasible: {errs[:5]}")
-        if sched.makespan > sched_lp.makespan * (1 + 1e-6) + 1e-9:
-            raise AssertionError(
-                f"replay makespan {sched.makespan} exceeds LP makespan {sched_lp.makespan}"
-            )
-    if objective == "makespan":
-        obj_val = sched.makespan
-    else:
-        w = np.ones(inst.N) if weights is None else np.asarray(weights)
-        comp = np.array([sched.completion_time(n) for n in range(inst.N)])
-        obj_val = float(w @ comp + beta * sched.makespan)
-    return LPResult(
-        schedule=sched,
-        lp_makespan=float(sched_lp.makespan),
-        objective_value=obj_val,
-        backend=backend,
-        status=status,
-        n_vars=lp.n_vars,
-        n_rows=len(lp.b_ub) + len(lp.b_eq),
+    ``backend`` may be a registry name ("auto", "simplex", "scipy",
+    "batched", ...) or a :class:`repro.core.backends.SolverBackend` instance.
+    """
+    req = SolveRequest(
+        instance=inst,
+        objective=objective,
+        weights=weights,
+        beta=beta,
+        cross_check=cross_check,
+        validate=validate,
     )
+    return get_backend(backend).solve(req)
 
 
 def solve_batch(
@@ -174,18 +67,12 @@ def solve_batch(
                   Uncertified elements silently fall back to the serial path.
       "serial"  — a plain Python loop over :func:`solve` (the reference).
 
-    Returns a list of :class:`LPResult` in caller order.  ``cache`` may be a
-    :class:`repro.engine.cache.SolutionCache` to reuse solutions across calls
-    (batched backend only).
+    Returns a list of :class:`SolveReport` in caller order.  ``cache`` may be
+    a :class:`repro.engine.cache.SolutionCache` to reuse solutions across
+    calls (batched backend only).
     """
-    instances = list(instances)
-    if backend == "serial":
-        return [solve(inst, objective=objective) for inst in instances]
-    if backend == "batched":
-        from repro.engine.service import solve_bulk  # deferred: jax import
-
-        return solve_bulk(instances, objective=objective, cache=cache)
-    raise ValueError(backend)
+    reqs = [SolveRequest(instance=inst, objective=objective) for inst in instances]
+    return get_backend(backend, cache=cache).solve_many(reqs)
 
 
 def lower_bound(inst: Instance) -> float:

@@ -1,21 +1,23 @@
-"""Vectorized Fig.-6 LP builder for a packed bucket.
+"""Vectorized Fig.-6 LP builder for a packed bucket — the dense IR consumer.
 
-``repro.core.lp.build_lp`` enumerates constraints with Python loops per
-instance; at engine batch sizes that loop dominates the solve.  Within an
-exact ``(m, T, q)`` bucket every instance has the *same* constraint pattern —
-only the coefficient values differ — so this builder walks the pattern once
-and writes each row's coefficients for the whole batch with one vectorized
-assignment per term.
+The constraint families live in :mod:`repro.lpir.ir` (emitted once for every
+builder in the tree); this module feeds the emitter a :class:`BucketView` —
+whose accessors return ``[B]`` coefficient vectors instead of scalars — and
+lowers the resulting row stream to the dense ``[B, R, n_vars]`` batches the
+vmapped simplex consumes.  Within an exact ``(m, T, q)`` bucket every
+instance has the *same* constraint pattern, so each IR term becomes one
+vectorized assignment for the whole batch.
 
-Differences from the serial builder (optimum unaffected, shapes static):
+Differences from the serial lowering (optimum unaffected, shapes static):
 
-  * release/availability rows are elided when the whole bucket has zero
-    release/availability dates — they reduce to ``var >= 0``, which the
-    standard form already enforces.  The decision is bucket-wide, so the row
-    count stays batch-constant; it just varies between buckets (each row
-    count is its own compiled shape).  Dropping them shrinks the simplex
-    tableau — whose width is the pivot loop's memory traffic — by ~30% on
-    the common no-release workloads;
+  * the dead-row elision pass runs at *family* granularity: release /
+    availability rows are dropped only when the whole bucket has zero
+    dates — they reduce to ``var >= 0``, which the standard form already
+    enforces.  The decision is bucket-wide, so the row count stays
+    batch-constant; it just varies between buckets (each row count is its
+    own compiled shape).  Dropping them shrinks the simplex tableau — whose
+    width is the pivot loop's memory traffic — by ~30% on the common
+    no-release workloads;
   * matrices come out dense ([B, R, n_vars]) — exactly what the batched
     simplex consumes.
 
@@ -28,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+
+from repro.lpir import BucketView, elide_dead_rows, emit_schedule_ir, lower_dense_batch
 
 from .arena import PackedBucket
 
@@ -48,6 +52,7 @@ class BatchedLP:
     off_mk: int
     T: int
     m: int
+    ub_kinds: list  # [R] IR family tag per row (provenance / elision tests)
 
     def gamma_of(self, x: np.ndarray) -> np.ndarray:
         """Extract [B, m, T] fractions from a batched solution [B, n_vars]."""
@@ -60,113 +65,14 @@ class BatchedLP:
 
 def build_lp_bucket(bucket: PackedBucket) -> BatchedLP:
     """Build the makespan LP for every instance of an exact bucket at once."""
-    if bucket.m != bucket.m_real or bucket.T != bucket.T_real:
-        raise ValueError("LP building requires an exact (unpadded) bucket")
-    m, T, B = bucket.m, bucket.T, bucket.B
-    n_comm = max(m - 1, 0) * T
-    n_comp = m * T
-    off_comm, off_comp = 0, n_comm
-    off_gamma = n_comm + n_comp
-    off_mk = off_gamma + m * T
-    n_vars = off_mk + 1
-
-    z, K, tau = bucket.z, bucket.latency, bucket.tau  # [B, m-1], [B, m-1], [B, m]
-    vcm, vcp, rel = bucket.vcomm_cell, bucket.vcomp_cell, bucket.rel_cell  # [B, T]
-    w_cell = bucket.w_cell  # [B, m, T]
-
-    def comm(i, t):
-        return off_comm + i * T + t
-
-    def comp(i, t):
-        return off_comp + i * T + t
-
-    def gam(i, t):
-        return off_gamma + i * T + t
-
-    # trivial-row elision: a release/availability row with a zero date is
-    # just ``var >= 0`` — implied by the standard form — so skip the whole
-    # family when no instance in the bucket has a nonzero date
-    has_rel = bool(np.any(rel != 0.0))
-    has_tau = bool(np.any(tau != 0.0))
-
-    # ---- count rows (pattern only; identical logic to the loop below) ----
-    R = 0
-    for t in range(T):
-        for i in range(m - 1):
-            R += (i >= 1) + (t >= 1) * (1 + (i + 1 <= m - 2)) + (i == 0) * has_rel
-        for i in range(m):
-            R += (i >= 1) + (t >= 1) + (t == 0) * has_tau + (i == 0) * has_rel
-    R += m  # makespan rows
-
-    A_ub = np.zeros((B, R, n_vars))
-    b_ub = np.zeros((B, R))
-    row = 0
-
-    def comm_end_terms(i, t):
-        """comm_end(i,t) as ([(col, val[B])...], const[B])."""
-        terms = [(comm(i, t), 1.0)]
-        coef = z[:, i] * vcm[:, t]
-        for k in range(i + 1, m):
-            terms.append((gam(k, t), coef))
-        return terms, K[:, i]
-
-    def comp_end_terms(i, t):
-        return [(comp(i, t), 1.0), (gam(i, t), w_cell[:, i, t] * vcp[:, t])], 0.0
-
-    def add_ge(lhs_terms, rhs_terms, rhs_const):
-        """lhs >= rhs + const  ->  -(lhs) + rhs <= -const."""
-        nonlocal row
-        for col, val in lhs_terms:
-            A_ub[:, row, col] -= val
-        for col, val in rhs_terms:
-            A_ub[:, row, col] += val
-        b_ub[:, row] = -rhs_const
-        row += 1
-
-    for t in range(T):
-        for i in range(m - 1):
-            if i >= 1:  # (1) store-and-forward
-                rt, rc = comm_end_terms(i - 1, t)
-                add_ge([(comm(i, t), 1.0)], rt, rc)
-            if t >= 1:
-                rt, rc = comm_end_terms(i, t - 1)  # (2b)/(3b) own-port
-                add_ge([(comm(i, t), 1.0)], rt, rc)
-                if i + 1 <= m - 2:  # (2)/(3) receive-after-forward
-                    rt, rc = comm_end_terms(i + 1, t - 1)
-                    add_ge([(comm(i, t), 1.0)], rt, rc)
-            if i == 0 and has_rel:  # (4) release dates
-                add_ge([(comm(0, t), 1.0)], [], rel[:, t])
-        for i in range(m):
-            if i >= 1:  # (6) compute after the corresponding receive
-                rt, rc = comm_end_terms(i - 1, t)
-                add_ge([(comp(i, t), 1.0)], rt, rc)
-            if t >= 1:  # (8)/(9) compute serialization
-                rt, rc = comp_end_terms(i, t - 1)
-                add_ge([(comp(i, t), 1.0)], rt, rc)
-            if t == 0 and has_tau:  # (10) availability dates
-                add_ge([(comp(i, 0), 1.0)], [], tau[:, i])
-            if i == 0 and has_rel:
-                add_ge([(comp(0, t), 1.0)], [], rel[:, t])
-
-    # (13) makespan >= every completion
-    for i in range(m):
-        rt, rc = comp_end_terms(i, T - 1)
-        add_ge([(off_mk, 1.0)], rt, rc)
-    assert row == R, (row, R)
-
-    # (12) completeness
-    n_loads = bucket.n_loads
-    A_eq = np.zeros((B, n_loads, n_vars))
-    b_eq = np.ones((B, n_loads))
-    for t in range(T):
-        n = int(bucket.load_of_cell[t])
-        for i in range(m):
-            A_eq[:, n, gam(i, t)] = 1.0
-
-    c = np.zeros(n_vars)
-    c[off_mk] = 1.0
+    ir = emit_schedule_ir(BucketView(bucket), objective="makespan")
+    ir = elide_dead_rows(ir, granularity="family")
+    dense = lower_dense_batch(ir)
+    lay = ir.layout
     return BatchedLP(
-        n_vars=n_vars, c=c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
-        off_comm=off_comm, off_comp=off_comp, off_gamma=off_gamma,
-        off_mk=off_mk, T=T, m=m,
+        n_vars=lay.n_vars, c=dense.c,
+        A_ub=dense.A_ub, b_ub=dense.b_ub, A_eq=dense.A_eq, b_eq=dense.b_eq,
+        off_comm=lay.off_comm, off_comp=lay.off_comp, off_gamma=lay.off_gamma,
+        off_mk=lay.off_mk, T=lay.T, m=lay.m,
+        ub_kinds=dense.ub_kinds,
     )

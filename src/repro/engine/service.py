@@ -13,7 +13,9 @@
      back to the serial NumPy solver — the engine is an accelerator, never a
      correctness compromise.
 
-``PlanService`` wraps this in a submit/flush request queue for serving
+``BatchedBackend`` exposes this path through the solver-backend registry
+(``repro.core.backends``; registered lazily as ``"batched"``), and
+``PlanService`` wraps it in a submit/flush request queue for serving
 call-sites (launch/serve.py --plan, runtime replans).
 """
 
@@ -23,6 +25,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.backends import SolveReport, SolveRequest, SolverBackend, get_backend
 from repro.core.instance import Instance
 from repro.core.schedule import Schedule
 from repro.core.simulator import simulate
@@ -34,7 +37,7 @@ from .batched_sim import simulate_bucket
 from .batched_simplex import solve_simplex_batched
 from .cache import CachedSolution, SolutionCache
 
-__all__ = ["solve_bulk", "PlanService"]
+__all__ = ["solve_bulk", "BatchedBackend", "PlanService"]
 
 _REPLAY_TOL = 1e-6
 
@@ -61,14 +64,17 @@ def solve_bulk(
     objective: str = "makespan",
     cache: SolutionCache | None = None,
     fallback: bool = True,
+    validate: bool = True,
 ) -> list:
     """Solve many instances at once; returns ``LPResult``s in caller order.
 
     Only the paper's makespan objective runs on the batched path; other
-    objectives delegate to the serial solver per instance.
+    objectives delegate to the serial solver per instance.  ``validate``
+    is forwarded to the serial solver on the (rare) uncertified-element
+    fallback — the batched path itself always certifies by replay.
     """
     if objective != "makespan":
-        return [solve(inst, objective=objective) for inst in instances]
+        return [solve(inst, objective=objective, validate=validate) for inst in instances]
 
     results: list = [None] * len(instances)
     keys: list = [None] * len(instances)
@@ -114,7 +120,7 @@ def solve_bulk(
                         f"batched solve failed for instance {gi}: "
                         f"status={res.status_str(b)} replay={mk[b]} lp={lp_mks[b]}"
                     )
-                results[gi] = solve(inst, objective="makespan")
+                results[gi] = solve(inst, objective="makespan", validate=validate)
                 if cache is not None and results[gi].ok:
                     cache.put(keys[gi], CachedSolution(
                         gamma=results[gi].schedule.gamma,
@@ -141,17 +147,68 @@ def solve_bulk(
     return results
 
 
+class BatchedBackend(SolverBackend):
+    """The engine's bulk path behind the ``SolverBackend`` registry.
+
+    ``solve_many`` routes makespan requests through :func:`solve_bulk`
+    (cache-first, bucketed, vmapped); requests the batched path cannot
+    express — other objectives (whose ``weights``/``beta`` must be honored)
+    or an explicit ``cross_check`` — delegate to the serial reference solver
+    with their full request, so no request field is ever silently dropped.
+    Reports come back in caller order with their requests attached.
+    """
+
+    name = "batched"
+
+    def __init__(self, cache: SolutionCache | None = None, fallback: bool = True):
+        super().__init__(cache=cache)
+        self.fallback = fallback
+
+    @staticmethod
+    def _batchable(req: SolveRequest) -> bool:
+        # the batched path solves the paper's makespan objective and
+        # certifies by ASAP replay; a cross_check against the *other* serial
+        # backend is a serial-only contract, so honor it serially
+        return req.objective == "makespan" and not req.cross_check
+
+    def solve_many(self, requests: list) -> list:
+        requests = list(requests)
+        reports: list = [None] * len(requests)
+        # batchable requests keep the bulk path; validate only affects the
+        # rare uncertified-element fallback, so group by it
+        by_validate: dict[bool, list[int]] = {}
+        for i, req in enumerate(requests):
+            if self._batchable(req):
+                by_validate.setdefault(req.validate, []).append(i)
+        for validate, bulk_idxs in by_validate.items():
+            results = solve_bulk(
+                [requests[i].instance for i in bulk_idxs],
+                objective="makespan",
+                cache=self.cache,
+                fallback=self.fallback,
+                validate=validate,
+            )
+            for i, res in zip(bulk_idxs, results):
+                reports[i] = SolveReport.from_result(res, requests[i])
+        for i, req in enumerate(requests):
+            if reports[i] is None:
+                reports[i] = get_backend("auto").solve(req)
+        return reports
+
+
 @dataclasses.dataclass
 class _Ticket:
     index: int
 
 
 class PlanService:
-    """Batching request front-end over :func:`solve_bulk`.
+    """Batching request front-end over the batched backend.
 
-    Call sites ``submit`` instances as they arrive and ``flush`` once per
-    scheduling tick; the service coalesces everything submitted since the
-    last flush into one bulk solve (cache-first).
+    Call sites ``submit`` work as it arrives — either a bare
+    :class:`Instance` (solved under the service's default objective) or a
+    full :class:`SolveRequest` — and ``flush`` once per scheduling tick; the
+    service coalesces everything submitted since the last flush into one
+    bulk solve (cache-first).
     """
 
     def __init__(
@@ -163,20 +220,24 @@ class PlanService:
         self.cache = cache if cache is not None else SolutionCache()
         self.objective = objective
         self.max_results = max_results
-        self._queue: list[Instance] = []
+        self.backend = BatchedBackend(cache=self.cache)
+        self._queue: list[SolveRequest] = []
         self._results: list = []
         self._base = 0  # absolute ticket index of _results[0]
 
-    def submit(self, inst: Instance) -> _Ticket:
-        self._queue.append(inst)
+    def submit(self, work) -> _Ticket:
+        """Queue an :class:`Instance` or a :class:`SolveRequest`; returns a ticket."""
+        if not isinstance(work, SolveRequest):
+            work = SolveRequest(instance=work, objective=self.objective)
+        self._queue.append(work)
         return _Ticket(index=self._base + len(self._results) + len(self._queue) - 1)
 
     def flush(self) -> list:
-        """Solve everything queued; returns the new results (queue order)."""
+        """Solve everything queued; returns the new reports (queue order)."""
         if not self._queue:
             return []
         batch, self._queue = self._queue, []
-        res = solve_bulk(batch, objective=self.objective, cache=self.cache)
+        res = self.backend.solve_many(batch)
         self._results.extend(res)
         # bound retained results so a long-running serving loop cannot grow
         # without limit; tickets older than the window raise in result()

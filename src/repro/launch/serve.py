@@ -38,6 +38,15 @@ def main(argv=None):
     ap.add_argument("--greedy", action="store_true", default=True)
     ap.add_argument("--plan", type=int, default=0,
                     help="also DLT-plan N request batches over a 4-stage chain")
+    ap.add_argument("--plan-backend", default="batched",
+                    help="solver-backend registry entry for --plan "
+                         "(see repro.core.available_backends())")
+    ap.add_argument("--auto-t", type=int, default=0, metavar="T_MAX",
+                    help="with --plan: sweep 1..T_MAX installments through "
+                         "the engine and report the cost-aware T*")
+    ap.add_argument("--installment-cost", type=float, default=1e-3,
+                    help="fixed per-installment overhead (seconds) charged "
+                         "by the --auto-t sweep")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -84,11 +93,10 @@ def main(argv=None):
     if args.plan:
         # DLT multi-load plan: N request batches over a heterogeneous 4-stage
         # chain, speeds scaled to the workload (a batch ~50ms/stage, transfer
-        # ~15ms) so the schedule is non-trivial.  Replans route through the
-        # engine's plan service: the solve itself is batched, and a second
-        # identical planning tick (the common serving case) hits the cache.
-        from repro.engine import PlanService
-
+        # ~15ms) so the schedule is non-trivial.  The backend comes from the
+        # solver registry (--plan-backend); with the default batched engine
+        # the solve itself is vmapped, and a second identical planning tick
+        # (the common serving case) hits the solution cache.
         fl = decode_flops_per_token(cfg, args.prompt_len) * args.gen_len
         base_speed = fl * args.batch / 0.05
         base_bw = 4.0 * args.prompt_len * args.batch / 0.015
@@ -96,20 +104,45 @@ def main(argv=None):
         links = [LinkSpec(base_bw, 50e-6)] * 3
         loads = [BatchSpec(num_samples=args.batch, bytes_per_sample=4.0 * args.prompt_len,
                            flops_per_sample=fl) for _ in range(args.plan)]
-        service = PlanService()
-        planner = Planner(stages, links, cache=service.cache)
-        plan = planner.plan(loads, q=2, backend="batched")
+        use_engine = args.plan_backend == "batched"
+        if use_engine:  # the jax-backed engine + its solution cache
+            from repro.engine import PlanService
+
+            service = PlanService()
+            planner = Planner(stages, links, cache=service.cache)
+        else:  # serial registry backends: no engine import, no cache
+            planner = Planner(stages, links)
+        plan = planner.plan(loads, q=2, backend=args.plan_backend)
         print(f"DLT plan for {args.plan} request batches over 4 stages: "
               f"makespan={plan.makespan * 1e3:.3f}ms "
               f"(backend={plan.result.backend})")
         for t, (n, j) in enumerate(plan.cells):
             print(f"  load {n} installment {j}: "
                   f"requests/stage={[int(x) for x in plan.samples[t]]}")
-        # a replanning tick with an unchanged platform state: pure cache hit
-        plan2 = planner.plan(loads, q=2, backend="batched")
-        st = service.stats()
-        print(f"replan tick: makespan={plan2.makespan * 1e3:.3f}ms "
-              f"cache={st['hits']} hit / {st['misses']} miss")
+        # a replanning tick with an unchanged platform state: with the
+        # engine backend this is a pure solution-cache hit
+        plan2 = planner.plan(loads, q=2, backend=args.plan_backend)
+        tick = f"replan tick: makespan={plan2.makespan * 1e3:.3f}ms"
+        if use_engine:
+            st = service.stats()
+            tick += f" cache={st['hits']} hit / {st['misses']} miss"
+        print(tick)
+        if args.auto_t:
+            # cost-aware installment chooser: one bulk sweep up the q ladder
+            res = planner.plan_auto_T(
+                loads, t_max=args.auto_t,
+                installment_cost=args.installment_cost,
+                backend=args.plan_backend,
+            )
+            swept = ", ".join(
+                f"q={q}: {res.makespans[q] * 1e3:.3f}ms"
+                f"+{(res.costs[q] - res.makespans[q]) * 1e3:.3f}ms"
+                for q in sorted(res.makespans)
+            )
+            print(f"auto-T sweep (installment cost "
+                  f"{args.installment_cost * 1e3:.3f}ms): {swept}")
+            print(f"  -> T* = {res.t_star} installments/load, "
+                  f"cost-aware makespan {res.costs[res.t_star] * 1e3:.3f}ms")
 
 
 if __name__ == "__main__":

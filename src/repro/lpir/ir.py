@@ -1,0 +1,336 @@
+"""The schedule-LP intermediate representation: Fig. 6 emitted exactly once.
+
+Before this package existed the paper's constraint families (1)-(10) were
+written three times — sparse triplets in ``core/lp.py``, dense ``[B, R, n]``
+bucket batches in ``engine/batched_lp.py``, and a per-load equal-finish copy
+inside ``core/heuristics.py``.  Every §5 extension had to be implemented and
+debugged three times.  Here the families are walked by ONE emitter,
+:func:`emit_schedule_ir`, which produces a backend-neutral *row stream*; the
+lowerers in :mod:`repro.lpir.lower` turn that stream into whichever matrix
+format a solver backend wants.
+
+The trick that lets a single emitter serve both the serial and the batched
+builders is that every coefficient is obtained through a *view* (see
+:mod:`repro.lpir.views`): a view returns either a Python float (one
+instance) or a ``[B]`` numpy vector (a whole packed bucket).  The emitter
+only ever multiplies and negates coefficients, and numpy broadcasting makes
+those operations agnostic to which of the two it is holding — so the row
+stream is literally the same code path for both, with ``ir.batch`` recording
+which flavour it carries.
+
+Row stream format
+-----------------
+
+* a :class:`Row` is ``(kind, terms, rhs)`` with ``terms = [(col, coeff)]``
+  meaning ``sum_j coeff_j * x_{col_j}  <=  rhs`` (ub rows) or ``== rhs``
+  (eq rows); ``coeff``/``rhs`` are floats or ``[B]`` vectors;
+* ``kind`` tags the paper family the row came from (see ``K_*`` below) so
+  passes and tests can reason about provenance;
+* variable columns follow :class:`VarLayout` — comm starts, comp starts,
+  gamma, makespan, then optional completion-time variables; identical to the
+  historical ``ScheduleLP``/``BatchedLP`` layouts, so extraction offsets are
+  interchangeable across every backend.
+
+Families emitted (paper numbering; DESIGN.md ## The schedule-LP IR):
+
+  (1)   store-and-forward            ``comm(i,t)   >= comm_end(i-1,t)``
+  (2b)/(3b) own-port serialization   ``comm(i,t)   >= comm_end(i,t-1)``
+  (2)/(3) receive-after-forward      ``comm(i,t)   >= comm_end(i+1,t-1)``
+  (4)   release dates                ``comm(0,t)   >= rel(t)``, ``comp(0,t) >= rel(t)``
+  (4')  link availability floors     ``comm(i,0)   >= comm_floor(i)``  (zero on
+        plain Fig. 6 instances — this is how the heuristics' equal-finish
+        sub-LP injects platform state; elided when zero)
+  (6)   compute-after-receive        ``comp(i,t)   >= comm_end(i-1,t)``
+  (8)/(9) compute serialization      ``comp(i,t)   >= comp_end(i,t-1)``
+  (10)  availability dates           ``comp(i,0)   >= tau(i)``
+  (12)  completeness (eq)            ``sum_{i,t: load(t)=n} gamma(i,t) == 1``
+  (13)  makespan                     ``mk >= comp_end(i,T-1)`` — or, in
+        equal-finish mode, ``comp_end(i,T-1) == mk`` for participants and
+        ``gamma(i,t) == 0`` for non-participants
+  (§5)  completion-time variables    ``C_n >= comp_end(i, last cell of n)``
+
+Dead-row elision (:func:`elide_dead_rows`) drops the single-variable floor
+families whose right-hand side is identically zero — they reduce to
+``x >= 0``, which the standard form already enforces.  ``granularity="row"``
+reproduces the serial builder's per-cell behaviour; ``granularity="family"``
+reproduces the batched builder's bucket-wide decision (the row count must
+stay batch-constant, so a family is only dropped when NO instance in the
+bucket activates ANY of its rows).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "Row",
+    "VarLayout",
+    "ScheduleIR",
+    "emit_schedule_ir",
+    "elide_dead_rows",
+    "ELIDABLE_KINDS",
+    "K_STORE_FORWARD",
+    "K_OWN_PORT",
+    "K_RECV_AFTER_FWD",
+    "K_RELEASE_COMM",
+    "K_RELEASE_COMP",
+    "K_LINK_AVAIL",
+    "K_COMPUTE_AFTER_RECV",
+    "K_COMP_SERIAL",
+    "K_AVAIL",
+    "K_COMPLETENESS",
+    "K_MAKESPAN",
+    "K_EQUAL_FINISH",
+    "K_GAMMA_ZERO",
+    "K_COMPLETION",
+]
+
+# constraint-family tags (paper numbering in the docstring above)
+K_STORE_FORWARD = "store_forward"  # (1)
+K_OWN_PORT = "own_port"  # (2b)/(3b)
+K_RECV_AFTER_FWD = "recv_after_fwd"  # (2)/(3)
+K_RELEASE_COMM = "release_comm"  # (4) on comm starts
+K_RELEASE_COMP = "release_comp"  # (4) on comp starts
+K_LINK_AVAIL = "link_avail"  # (4') platform link floors
+K_COMPUTE_AFTER_RECV = "compute_after_recv"  # (6)
+K_COMP_SERIAL = "comp_serial"  # (8)/(9)
+K_AVAIL = "avail"  # (10)
+K_COMPLETENESS = "completeness"  # (12), equality
+K_MAKESPAN = "makespan"  # (13)
+K_EQUAL_FINISH = "equal_finish"  # equal-finish variant of (13), equality
+K_GAMMA_ZERO = "gamma_zero"  # non-participant pin, equality
+K_COMPLETION = "completion"  # §5 completion-time rows
+
+# single-variable floor families: their rows are ``x >= rhs`` and become the
+# standard form's ``x >= 0`` when rhs == 0, hence safely removable
+ELIDABLE_KINDS = frozenset(
+    {K_RELEASE_COMM, K_RELEASE_COMP, K_LINK_AVAIL, K_AVAIL}
+)
+
+
+@dataclasses.dataclass
+class Row:
+    """One constraint row: ``sum(coeff * x[col] for col, coeff in terms) (<=|==) rhs``."""
+
+    kind: str
+    terms: list  # [(col, coeff)] — coeff is float or [B] ndarray
+    rhs: object  # float or [B] ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class VarLayout:
+    """Column layout shared by every lowering (matches the historical builders)."""
+
+    m: int
+    T: int
+    off_comm: int
+    off_comp: int
+    off_gamma: int
+    off_mk: int
+    off_cn: int  # -1 when completion-time variables are absent
+    n_vars: int
+
+    def comm(self, i: int, t: int) -> int:
+        return self.off_comm + i * self.T + t
+
+    def comp(self, i: int, t: int) -> int:
+        return self.off_comp + i * self.T + t
+
+    def gam(self, i: int, t: int) -> int:
+        return self.off_gamma + i * self.T + t
+
+
+@dataclasses.dataclass
+class ScheduleIR:
+    """The emitter's output: a solver-agnostic LP in row-stream form."""
+
+    layout: VarLayout
+    ub_rows: list  # [Row] — `terms <= rhs`
+    eq_rows: list  # [Row] — `terms == rhs`
+    c: np.ndarray  # [n_vars] objective (batch-constant by construction)
+    batch: int | None  # None => scalar coefficients; B => [B] coefficients
+    n_loads: int
+
+    @property
+    def n_vars(self) -> int:
+        return self.layout.n_vars
+
+
+def _layout_for(m: int, T: int, n_loads: int, want_cn: bool) -> VarLayout:
+    n_comm = max(m - 1, 0) * T
+    n_comp = m * T
+    off_comm = 0
+    off_comp = n_comm
+    off_gamma = n_comm + n_comp
+    off_mk = off_gamma + m * T
+    off_cn = off_mk + 1 if want_cn else -1
+    n_vars = off_mk + 1 + (n_loads if want_cn else 0)
+    return VarLayout(
+        m=m, T=T, off_comm=off_comm, off_comp=off_comp, off_gamma=off_gamma,
+        off_mk=off_mk, off_cn=off_cn, n_vars=n_vars,
+    )
+
+
+def emit_schedule_ir(
+    view,
+    objective: str = "makespan",
+    weights=None,
+    beta: float = 0.0,
+    equal_finish=None,
+) -> ScheduleIR:
+    """Walk the Fig. 6 constraint families once over ``view``.
+
+    ``view`` is any object satisfying the coefficient protocol of
+    :mod:`repro.lpir.views` (``m``, ``T``, ``batch``, ``load_of_cell``,
+    ``n_loads`` plus the accessors ``z/K/tau/comm_floor/vcomm/vcomp/rel/w``).
+
+    ``equal_finish`` (bool [m] or None) switches the (13) makespan family
+    into the equal-finish mode the [18]/[19] heuristics are built on: the
+    makespan variable becomes the participants' common completion time
+    (equality rows) and non-participants' fractions are pinned to zero.
+    """
+    m, T = view.m, view.T
+    want_cn = objective == "completion"
+    if want_cn and equal_finish is not None:
+        raise ValueError("equal_finish only applies to the makespan objective")
+    lay = _layout_for(m, T, view.n_loads, want_cn)
+    ub: list[Row] = []
+    eq: list[Row] = []
+
+    def comm_end_terms(i: int, t: int):
+        """comm_end(i, t) as (linear terms, constant) — K_i + z_i V_comm suffix."""
+        terms = [(lay.comm(i, t), 1.0)]
+        coef = view.z(i) * view.vcomm(t)
+        for k in range(i + 1, m):
+            terms.append((lay.gam(k, t), coef))
+        return terms, view.K(i)
+
+    def comp_end_terms(i: int, t: int):
+        return [(lay.comp(i, t), 1.0), (lay.gam(i, t), view.w(i, t) * view.vcomp(t))], 0.0
+
+    def ge(kind, lhs_terms, rhs_terms, rhs_const):
+        """lhs >= rhs + const  ->  -(lhs) + rhs <= -const."""
+        terms = [(col, -cf) for col, cf in lhs_terms] + rhs_terms
+        ub.append(Row(kind=kind, terms=terms, rhs=-rhs_const))
+
+    for t in range(T):
+        for i in range(m - 1):
+            if i >= 1:  # (1) store-and-forward
+                rt, rc = comm_end_terms(i - 1, t)
+                ge(K_STORE_FORWARD, [(lay.comm(i, t), 1.0)], rt, rc)
+            if t >= 1:
+                rt, rc = comm_end_terms(i, t - 1)  # (2b)/(3b) own-port
+                ge(K_OWN_PORT, [(lay.comm(i, t), 1.0)], rt, rc)
+                if i + 1 <= m - 2:  # (2)/(3) receive-after-forward
+                    rt, rc = comm_end_terms(i + 1, t - 1)
+                    ge(K_RECV_AFTER_FWD, [(lay.comm(i, t), 1.0)], rt, rc)
+            if i == 0:  # (4) release dates on the head link
+                ge(K_RELEASE_COMM, [(lay.comm(0, t), 1.0)], [], view.rel(t))
+            if t == 0:  # (4') link availability floors (platform state)
+                ge(K_LINK_AVAIL, [(lay.comm(i, 0), 1.0)], [], view.comm_floor(i))
+        for i in range(m):
+            if i >= 1:  # (6) compute after the corresponding receive
+                rt, rc = comm_end_terms(i - 1, t)
+                ge(K_COMPUTE_AFTER_RECV, [(lay.comp(i, t), 1.0)], rt, rc)
+            if t >= 1:  # (8)/(9) compute serialization
+                rt, rc = comp_end_terms(i, t - 1)
+                ge(K_COMP_SERIAL, [(lay.comp(i, t), 1.0)], rt, rc)
+            if t == 0:  # (10) availability dates
+                ge(K_AVAIL, [(lay.comp(i, 0), 1.0)], [], view.tau(i))
+            if i == 0:  # (4) release dates on the head processor
+                ge(K_RELEASE_COMP, [(lay.comp(0, t), 1.0)], [], view.rel(t))
+
+    # (12) completeness — one equality per load, in load order
+    load_of_cell = list(view.load_of_cell)
+    for n in range(view.n_loads):
+        terms = [
+            (lay.gam(i, t), 1.0)
+            for t in range(T)
+            if load_of_cell[t] == n
+            for i in range(m)
+        ]
+        eq.append(Row(kind=K_COMPLETENESS, terms=terms, rhs=1.0))
+
+    # (13) makespan — or its equal-finish variant
+    if equal_finish is None:
+        for i in range(m):
+            rt, rc = comp_end_terms(i, T - 1)
+            ge(K_MAKESPAN, [(lay.off_mk, 1.0)], rt, rc)
+    else:
+        part = np.asarray(equal_finish, dtype=bool)
+        if part.shape != (m,):
+            raise ValueError(f"equal_finish must be bool [m={m}], got {part.shape}")
+        for i in range(m):
+            if part[i]:
+                rt, rc = comp_end_terms(i, T - 1)
+                eq.append(Row(
+                    kind=K_EQUAL_FINISH,
+                    terms=rt + [(lay.off_mk, -1.0)],
+                    rhs=-rc,
+                ))
+            else:
+                for t in range(T):
+                    eq.append(Row(kind=K_GAMMA_ZERO, terms=[(lay.gam(i, t), 1.0)], rhs=0.0))
+
+    # §5 completion-time variables
+    if want_cn:
+        last_cell = {n: t for t, n in enumerate(load_of_cell)}
+        for n in range(view.n_loads):
+            for i in range(m):
+                rt, rc = comp_end_terms(i, last_cell[n])
+                ge(K_COMPLETION, [(lay.off_cn + n, 1.0)], rt, rc)
+
+    # objective
+    c = np.zeros(lay.n_vars)
+    if objective == "makespan":
+        c[lay.off_mk] = 1.0
+    elif objective == "completion":
+        w = np.ones(view.n_loads) if weights is None else np.asarray(weights, dtype=np.float64)
+        c[lay.off_cn : lay.off_cn + view.n_loads] = w
+        # with beta == 0 keep the makespan tied down so solutions stay
+        # interpretable (same convention as the historical builder)
+        c[lay.off_mk] = beta if beta != 0.0 else 1e-9
+    else:
+        raise ValueError(objective)
+
+    return ScheduleIR(
+        layout=lay, ub_rows=ub, eq_rows=eq, c=c, batch=view.batch,
+        n_loads=view.n_loads,
+    )
+
+
+def _all_zero(rhs) -> bool:
+    return bool(np.all(np.asarray(rhs) == 0.0))
+
+
+def elide_dead_rows(ir: ScheduleIR, granularity: str = "row") -> ScheduleIR:
+    """Drop floor rows that reduce to ``x >= 0`` (implied by the standard form).
+
+    ``granularity="row"``   — drop each all-zero floor row individually (the
+                              serial builder's historical per-cell behaviour);
+    ``granularity="family"`` — drop a floor family only when EVERY one of its
+                              rows is all-zero across the whole batch (the
+                              batched builder's bucket-wide decision; keeps
+                              the row count batch-constant, and guarantees
+                              the elision never fires when any instance in
+                              the bucket has a nonzero date in the family).
+    """
+    if granularity == "row":
+        keep = [
+            r for r in ir.ub_rows
+            if not (r.kind in ELIDABLE_KINDS and _all_zero(r.rhs))
+        ]
+    elif granularity == "family":
+        live_kinds = {
+            r.kind for r in ir.ub_rows
+            if r.kind in ELIDABLE_KINDS and not _all_zero(r.rhs)
+        }
+        keep = [
+            r for r in ir.ub_rows
+            if r.kind not in ELIDABLE_KINDS or r.kind in live_kinds
+        ]
+    else:
+        raise ValueError(granularity)
+    return dataclasses.replace(ir, ub_rows=keep)

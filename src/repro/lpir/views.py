@@ -1,0 +1,147 @@
+"""Coefficient views: the adapters that feed :func:`repro.lpir.ir.emit_schedule_ir`.
+
+A view presents one scheduling problem (or a whole packed bucket of them) to
+the emitter through a uniform accessor protocol:
+
+  attributes  ``m``, ``T`` (total cells), ``batch`` (None or B),
+              ``load_of_cell`` ([T] ints), ``n_loads``
+  accessors   ``z(i)``, ``K(i)``          — link i rate / latency
+              ``tau(i)``                  — processor availability floor
+              ``comm_floor(i)``           — link availability floor (4')
+              ``vcomm(t)``, ``vcomp(t)``  — cell t volumes
+              ``rel(t)``                  — cell t release date
+              ``w(i, t)``                 — seconds/unit for P_i on cell t
+
+Scalar views return Python floats; :class:`BucketView` returns ``[B]``
+vectors.  numpy broadcasting makes the emitter's arithmetic identical over
+both, which is what lets Fig. 6 be written exactly once.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["InstanceView", "BucketView", "EqualFinishView"]
+
+
+class InstanceView:
+    """One :class:`repro.core.instance.Instance` — scalar coefficients."""
+
+    batch = None
+
+    def __init__(self, inst):
+        self.inst = inst
+        self.m = inst.m
+        self.load_of_cell = [n for n, _ in inst.cells()]
+        self.T = len(self.load_of_cell)
+        self.n_loads = inst.N
+
+    def z(self, i):
+        return float(self.inst.chain.z[i])
+
+    def K(self, i):
+        return float(self.inst.chain.latency[i])
+
+    def tau(self, i):
+        return float(self.inst.chain.tau[i])
+
+    def comm_floor(self, i):
+        return 0.0  # Fig. 6 links start free; heuristics override via EqualFinishView
+
+    def vcomm(self, t):
+        return float(self.inst.loads.v_comm[self.load_of_cell[t]])
+
+    def vcomp(self, t):
+        return float(self.inst.loads.v_comp[self.load_of_cell[t]])
+
+    def rel(self, t):
+        return float(self.inst.loads.release[self.load_of_cell[t]])
+
+    def w(self, i, t):
+        return self.inst.w_of(i, self.load_of_cell[t])
+
+
+class BucketView:
+    """One exact ``(m, T, q)`` :class:`repro.engine.arena.PackedBucket` —
+    every accessor returns the coefficient for ALL B instances at once."""
+
+    def __init__(self, bucket):
+        if bucket.m != bucket.m_real or bucket.T != bucket.T_real:
+            raise ValueError("LP emission requires an exact (unpadded) bucket")
+        self.bucket = bucket
+        self.batch = bucket.B
+        self.m = bucket.m
+        self.T = bucket.T
+        self.load_of_cell = [int(x) for x in bucket.load_of_cell]
+        self.n_loads = bucket.n_loads
+
+    def z(self, i):
+        return self.bucket.z[:, i]
+
+    def K(self, i):
+        return self.bucket.latency[:, i]
+
+    def tau(self, i):
+        return self.bucket.tau[:, i]
+
+    def comm_floor(self, i):
+        return 0.0  # scalar zero broadcasts over the batch
+
+    def vcomm(self, t):
+        return self.bucket.vcomm_cell[:, t]
+
+    def vcomp(self, t):
+        return self.bucket.vcomp_cell[:, t]
+
+    def rel(self, t):
+        return self.bucket.rel_cell[:, t]
+
+    def w(self, i, t):
+        return self.bucket.w_cell[:, i, t]
+
+
+class EqualFinishView:
+    """The [18]/[19] per-load building block as a one-cell Fig. 6 problem.
+
+    One load ``n`` of ``inst``, distributed in a single installment, with the
+    platform state injected as floors: ``proc_free`` becomes the availability
+    family (10) and ``link_ready`` the link-availability family (4').  Paired
+    with ``emit_schedule_ir(..., equal_finish=participants)`` this reproduces
+    the equal-finish sub-LP the heuristics solve per load.
+    """
+
+    batch = None
+    T = 1
+    load_of_cell = (0,)
+    n_loads = 1
+
+    def __init__(self, inst, n: int, proc_free, link_ready):
+        self.inst = inst
+        self.n = n
+        self.m = inst.m
+        self.proc_free = np.asarray(proc_free, dtype=np.float64)
+        self.link_ready = np.asarray(link_ready, dtype=np.float64)
+
+    def z(self, i):
+        return float(self.inst.chain.z[i])
+
+    def K(self, i):
+        return float(self.inst.chain.latency[i])
+
+    def tau(self, i):
+        return float(self.proc_free[i])
+
+    def comm_floor(self, i):
+        return float(self.link_ready[i])
+
+    def vcomm(self, t):
+        return float(self.inst.loads.v_comm[self.n])
+
+    def vcomp(self, t):
+        return float(self.inst.loads.v_comp[self.n])
+
+    def rel(self, t):
+        return float(self.inst.loads.release[self.n])
+
+    def w(self, i, t):
+        return self.inst.w_of(i, self.n)

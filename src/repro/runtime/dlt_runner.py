@@ -45,24 +45,27 @@ __all__ = ["stage_batches", "make_dlt_train_step", "ChainReplanner"]
 
 
 class ChainReplanner:
-    """Online replanning for a running chain, routed through the engine.
+    """Online replanning for a running chain, routed through the registry.
 
     Owns a :class:`repro.core.planner.Planner` plus an engine solution cache
     (repro.engine): every replan — straggler drift, stage failure, or a bulk
-    what-if sweep — goes through the batched solver, and platform states the
-    chain has seen before replay from the cache instead of re-solving.
+    what-if sweep — is stated as a :class:`SolveRequest` and handed to the
+    ``backend`` registry entry (the batched engine by default), and platform
+    states the chain has seen before replay from the cache instead of
+    re-solving.
     """
 
-    def __init__(self, planner: Planner, q: int | list = 2):
+    def __init__(self, planner: Planner, q: int | list = 2, backend="batched"):
         from repro.engine.cache import SolutionCache
 
         self.planner = planner
         self.q = q
+        self.backend = backend
         if self.planner._cache is None:
             self.planner._cache = SolutionCache()
 
     def replan(self, batches: list) -> DLTPlan:
-        return self.planner.plan(batches, q=self.q, backend="batched")
+        return self.planner.plan(batches, q=self.q, backend=self.backend)
 
     def observe(self, stage: int, achieved_flops_per_sec: float, batches: list):
         """EWMA speed feedback; returns a fresh plan when drift demands one."""
@@ -73,10 +76,23 @@ class ChainReplanner:
     def on_failure(self, dead: int, batches: list, restore_delay: float = 0.0):
         """Stage loss: fuse links, carry the cache over, batched re-solve."""
         p2, plan = self.planner.replan_without_stage(
-            dead, batches, restore_delay=restore_delay, q=self.q, backend="batched"
+            dead, batches, restore_delay=restore_delay, q=self.q, backend=self.backend
         )
         self.planner = p2
         return plan
+
+    def auto_installments(
+        self, batches: list, t_max: int = 8, installment_cost: float = 0.0
+    ):
+        """Cost-aware installment chooser for the running chain: one batched
+        sweep (``Planner.plan_auto_T``) through this replanner's backend and
+        cache.  Returns the :class:`repro.core.planner.AutoTResult`."""
+        return self.planner.plan_auto_T(
+            batches,
+            t_max=t_max,
+            installment_cost=installment_cost,
+            backend=self.backend,
+        )
 
     def what_if_speeds(self, batches: list, speed_scales) -> np.ndarray:
         """Straggler sensitivity: predicted makespan per speed scenario.
@@ -87,7 +103,7 @@ class ChainReplanner:
         """
         import dataclasses as _dc
 
-        from repro.core.solver import solve_batch
+        from repro.core.backends import SolveRequest, get_backend
 
         insts = []
         m = len(self.planner.stages)
@@ -103,7 +119,8 @@ class ChainReplanner:
             ]
             p = Planner(stages, self.planner.links, ewma=self.planner.ewma)
             insts.append(p.to_instance(batches, q=self.q))
-        results = solve_batch(insts, backend="batched", cache=self.planner._cache)
+        solver = get_backend(self.backend, cache=self.planner._cache)
+        results = solver.solve_many([SolveRequest(instance=i) for i in insts])
         return np.array([r.makespan for r in results])
 
 

@@ -1,0 +1,84 @@
+"""Heuristics-vs-LP sanity: the [19]-style strategies can never beat either
+the trivial lower bound or the Fig. 6 LP at their own installment structure.
+
+This pins the migration of the heuristics' equal-finish sub-LP onto the
+shared IR: if the sub-LP ever drifted from the families the optimal LP
+emits, MULTIINST/HEURISTIC_B schedules would start crossing one of these
+bounds (they are feasible points of the same constraint system, so
+``lower_bound <= LP(q of heuristic) <= heuristic makespan`` must hold).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.heuristics import heuristic_b, multi_inst, single_inst
+from repro.core.instance import Chain, Instance, Loads, random_instance
+from repro.core.solver import lower_bound, solve
+
+REL = 1e-6
+ABS = 1e-9
+
+
+def _population(seed=0, count=12):
+    rng = np.random.default_rng(seed)
+    insts = []
+    for k in range(count):
+        m = int(rng.integers(2, 5))
+        n = int(rng.integers(1, 4))
+        inst = random_instance(rng, m=m, n_loads=n, with_latency=bool(k % 2))
+        if k % 3 == 0:  # availability + release dates (§5)
+            chain = Chain(w=inst.chain.w, z=inst.chain.z,
+                          tau=rng.uniform(0.0, 20.0, size=m),
+                          latency=inst.chain.latency)
+            loads = Loads(v_comm=inst.loads.v_comm, v_comp=inst.loads.v_comp,
+                          release=rng.uniform(0.0, 20.0, size=n))
+            inst = Instance(chain, loads, q=inst.q)
+        insts.append(inst)
+    return insts
+
+
+@pytest.mark.parametrize("strategy", [
+    pytest.param(lambda i: multi_inst(i, cap=4), id="multi_inst"),
+    pytest.param(heuristic_b, id="heuristic_b"),
+    pytest.param(single_inst, id="single_inst"),
+])
+def test_heuristic_dominated_by_lp_and_respects_lower_bound(strategy):
+    checked = 0
+    for inst in _population():
+        h = strategy(inst)
+        if h.failed:
+            continue
+        checked += 1
+        lb = lower_bound(inst)
+        assert h.makespan >= lb - ABS, (h.name, h.makespan, lb)
+        # the heuristic's replayed schedule is a feasible point of the LP
+        # with the heuristic's own installment structure -> LP opt <= it
+        lp = solve(inst.with_q(list(h.instance.q)))
+        assert lp.ok
+        assert lp.makespan <= h.makespan * (1 + REL) + ABS, (
+            h.name, lp.makespan, h.makespan,
+        )
+        assert lp.makespan >= lb - ABS
+    assert checked >= 8  # the population must actually exercise the bound
+
+
+def test_multi_inst_uncapped_also_dominated():
+    # the uncapped variant grows its own q per load; same domination must
+    # hold.  Communication-cheap instances keep it convergent (on the §6
+    # comm_to_comp=1 protocol it mostly diverges — paper §3.4 case 1 —
+    # which the capped test above already covers).
+    rng = np.random.default_rng(7)
+    checked = 0
+    for k in range(8):
+        inst = random_instance(rng, m=int(rng.integers(2, 5)),
+                               n_loads=int(rng.integers(1, 4)),
+                               comm_to_comp=0.05)
+        h = multi_inst(inst)
+        if h.failed:
+            continue
+        checked += 1
+        lp = solve(inst.with_q(list(h.instance.q)))
+        assert lp.ok
+        assert lp.makespan <= h.makespan * (1 + REL) + ABS
+        assert h.makespan >= lower_bound(inst) - ABS
+    assert checked >= 4

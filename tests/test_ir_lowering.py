@@ -1,0 +1,184 @@
+"""IR-lowering parity and dead-row elision regressions (no hypothesis needed;
+tests/test_ir_properties.py re-runs the parity check property-based).
+
+The sparse (serial) and dense-batch (engine) lowerings of the shared
+schedule-LP IR must describe the same optimization problem, and the
+family-granular dead-row elision must NEVER fire when any instance in a
+bucket has a nonzero release/availability date.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.instance import Chain, Instance, Loads
+from repro.core.lp import build_lp
+from repro.core.simplex import solve_simplex
+from repro.engine.arena import pack_instances
+from repro.engine.batched_lp import build_lp_bucket
+from repro.lpir import (
+    ELIDABLE_KINDS,
+    BucketView,
+    K_AVAIL,
+    K_RELEASE_COMM,
+    K_RELEASE_COMP,
+    elide_dead_rows,
+    emit_schedule_ir,
+)
+
+ATOL = 1e-9
+
+
+def solve_dense(c, A_ub, b_ub, A_eq, b_eq) -> float:
+    """Reference solve of one dense LP (HiGHS when present, else simplex)."""
+    try:
+        from scipy.optimize import linprog
+
+        res = linprog(c, A_ub=A_ub if len(b_ub) else None,
+                      b_ub=b_ub if len(b_ub) else None,
+                      A_eq=A_eq if len(b_eq) else None,
+                      b_eq=b_eq if len(b_eq) else None,
+                      bounds=(0, None), method="highs")
+        if res.status == 0:
+            return float(res.fun)
+    except ImportError:  # pragma: no cover
+        pass
+    r = solve_simplex(np.asarray(c), np.asarray(A_ub), np.asarray(b_ub),
+                      np.asarray(A_eq), np.asarray(b_eq))
+    assert r.ok, r.status
+    return float(r.objective)
+
+
+def assert_lowering_parity(insts: list) -> None:
+    """Both lowerings of a one-bucket population solve to identical optima."""
+    sparse_opts = []
+    for inst in insts:
+        lp = build_lp(inst)
+        A_ub, b_ub = lp.dense_ub()
+        A_eq, b_eq = lp.dense_eq()
+        sparse_opts.append(solve_dense(lp.c, A_ub, b_ub, A_eq, b_eq))
+
+    (bucket,) = pack_instances(insts, pad_shapes=False)
+    blp = build_lp_bucket(bucket)
+    for b, idx in enumerate(bucket.indices):
+        dense_opt = solve_dense(
+            blp.c, blp.A_ub[b], blp.b_ub[b], blp.A_eq[b], blp.b_eq[b]
+        )
+        scale = max(abs(sparse_opts[idx]), 1.0)
+        assert abs(dense_opt - sparse_opts[idx]) <= ATOL * scale, (
+            idx, dense_opt, sparse_opts[idx],
+        )
+
+
+def random_population(rng, B, m, n, q, with_release=False, with_tau=False,
+                      with_latency=False, unrelated=False) -> list:
+    insts = []
+    for _ in range(B):
+        chain = Chain(
+            w=rng.uniform(0.1, 10.0, m),
+            z=rng.uniform(0.01, 10.0, m - 1),
+            tau=rng.uniform(0.0, 2.0, m) if with_tau else 0.0,
+            latency=rng.uniform(0.0, 0.5, m - 1) if with_latency else 0.0,
+        )
+        loads = Loads(
+            v_comm=rng.uniform(0.1, 5.0, n),
+            v_comp=rng.uniform(0.1, 5.0, n),
+            release=rng.uniform(0.0, 3.0, n) if with_release else 0.0,
+        )
+        inst = Instance(chain, loads, q=q)
+        if unrelated:
+            mult = rng.uniform(0.5, 2.0, size=(m, n))
+            inst = Instance(chain, loads, q=q, w_per_load=chain.w[:, None] * mult)
+        insts.append(inst)
+    return insts
+
+
+@pytest.mark.parametrize("m,n,q,kw", [
+    (2, 1, 1, {}),  # smallest legal shape: the (2b)/(3b) own-port case
+    (2, 2, 2, {"with_release": True, "with_latency": True}),
+    (3, 2, 2, {"with_release": True, "with_tau": True}),
+    (4, 3, 1, {"with_tau": True, "unrelated": True}),
+    (3, 2, 3, {"with_release": True, "with_tau": True, "with_latency": True,
+               "unrelated": True}),
+])
+def test_lowering_parity_seeded(m, n, q, kw):
+    rng = np.random.default_rng(m * 100 + n * 10 + q)
+    assert_lowering_parity(random_population(rng, B=3, m=m, n=n, q=q, **kw))
+
+
+def _bucket_of(rng, rel_mask, tau_mask, m=3, n=2, q=2):
+    """A one-bucket population; instance k gets nonzero release (availability)
+    dates iff rel_mask[k] (tau_mask[k])."""
+    insts = []
+    for k in range(len(rel_mask)):
+        chain = Chain(
+            w=rng.uniform(0.5, 2.0, m),
+            z=rng.uniform(0.1, 1.0, m - 1),
+            tau=rng.uniform(0.5, 2.0, m) if tau_mask[k] else 0.0,
+            latency=0.0,
+        )
+        loads = Loads(
+            v_comm=rng.uniform(0.5, 2.0, n),
+            v_comp=rng.uniform(0.5, 2.0, n),
+            release=rng.uniform(0.5, 2.0, n) if rel_mask[k] else 0.0,
+        )
+        insts.append(Instance(chain, loads, q=q))
+    (bucket,) = pack_instances(insts, pad_shapes=False)
+    return bucket
+
+
+def test_dead_row_elision_never_fires_with_any_nonzero_release():
+    rng = np.random.default_rng(0)
+    release_kinds = (K_RELEASE_COMM, K_RELEASE_COMP)
+
+    # one instance out of four has release dates -> every release row stays
+    mixed = build_lp_bucket(_bucket_of(rng, [False, True, False, False],
+                                       [False] * 4))
+    full = build_lp_bucket(_bucket_of(rng, [True] * 4, [False] * 4))
+    n_mixed = sum(k in release_kinds for k in mixed.ub_kinds)
+    n_full = sum(k in release_kinds for k in full.ub_kinds)
+    assert n_mixed == n_full > 0
+
+    # availability dates gate their own family the same way
+    mixed_tau = build_lp_bucket(_bucket_of(rng, [False] * 4,
+                                           [False, False, True, False]))
+    assert sum(k == K_AVAIL for k in mixed_tau.ub_kinds) == mixed_tau.m
+
+    # an all-zero bucket elides the whole floor families
+    none = build_lp_bucket(_bucket_of(rng, [False] * 4, [False] * 4))
+    assert not any(k in ELIDABLE_KINDS for k in none.ub_kinds)
+    # ... which is exactly the tableau-width saving the engine relies on
+    assert none.A_ub.shape[1] < mixed.A_ub.shape[1]
+
+
+def test_family_elision_is_all_or_nothing_per_kind():
+    rng = np.random.default_rng(1)
+    bucket = _bucket_of(rng, [True, False], [False, False])
+    ir = emit_schedule_ir(BucketView(bucket))
+    out = elide_dead_rows(ir, granularity="family")
+    kinds_in = {r.kind for r in ir.ub_rows}
+    kinds_out = {r.kind for r in out.ub_rows}
+    assert K_RELEASE_COMM in kinds_out and K_RELEASE_COMP in kinds_out
+    assert K_AVAIL in kinds_in and K_AVAIL not in kinds_out
+    # surviving families keep EVERY row (batch-constant shape)
+    for kind in kinds_out:
+        assert sum(r.kind == kind for r in out.ub_rows) == sum(
+            r.kind == kind for r in ir.ub_rows
+        )
+
+
+def test_lp_building_refuses_padded_buckets():
+    rng = np.random.default_rng(2)
+    insts = [
+        Instance(
+            Chain(w=rng.uniform(0.5, 2.0, 3), z=rng.uniform(0.1, 1.0, 2)),
+            Loads(v_comm=rng.uniform(0.5, 2.0, 3), v_comp=rng.uniform(0.5, 2.0, 3)),
+            q=1,
+        )
+        for _ in range(2)
+    ]
+    (padded,) = pack_instances(insts, pad_shapes=True)
+    assert padded.m > padded.m_real or padded.T > padded.T_real
+    with pytest.raises(ValueError):
+        build_lp_bucket(padded)
+    with pytest.raises(ValueError):
+        BucketView(padded)

@@ -1,0 +1,55 @@
+"""Hypothesis property suite for IR-lowering parity.
+
+The seeded regressions live in tests/test_ir_lowering.py (they run without
+hypothesis); this module drives the same parity oracle —
+``assert_lowering_parity`` — over hypothesis-generated populations so CI
+(which installs requirements-dev.txt) explores the §5 extension space:
+nonzero release/availability dates, m=2 with the (2b)/(3b) own-port rows,
+unrelated machines, affine latencies, and multi-installment cells.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.instance import Chain, Instance, Loads
+
+from test_ir_lowering import assert_lowering_parity
+
+
+@st.composite
+def populations(draw):
+    """A small population sharing one (m, T, q) shape — i.e. one exact bucket —
+    with every §5 extension the views must translate."""
+    m = draw(st.integers(2, 4))
+    n = draw(st.integers(1, 3))
+    q = draw(st.integers(1, 2))
+    B = draw(st.integers(1, 3))
+    insts = []
+    for _ in range(B):
+        w = [draw(st.floats(0.1, 10.0)) for _ in range(m)]
+        z = [draw(st.floats(0.01, 10.0)) for _ in range(m - 1)]
+        lat = [draw(st.floats(0.0, 0.5)) for _ in range(m - 1)]
+        tau = [draw(st.floats(0.0, 2.0)) for _ in range(m)]
+        rel = [draw(st.floats(0.0, 3.0)) for _ in range(n)]
+        v_comm = [draw(st.floats(0.1, 5.0)) for _ in range(n)]
+        v_comp = [draw(st.floats(0.1, 5.0)) for _ in range(n)]
+        chain = Chain(w=w, z=z, tau=tau, latency=lat)
+        loads = Loads(v_comm=v_comm, v_comp=v_comp, release=rel)
+        inst = Instance(chain, loads, q=q)
+        if draw(st.booleans()):  # unrelated machines
+            mult = np.array(
+                [[draw(st.floats(0.5, 2.0)) for _ in range(n)] for _ in range(m)]
+            )
+            inst = Instance(chain, loads, q=q, w_per_load=inst.chain.w[:, None] * mult)
+        insts.append(inst)
+    return insts
+
+
+@given(insts=populations())
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+def test_sparse_and_dense_lowerings_solve_identically(insts):
+    assert_lowering_parity(insts)
