@@ -1,21 +1,26 @@
-"""Engine throughput: batched JAX solve/simulate vs the serial NumPy loop.
+"""Engine throughput, three ways: serial NumPy loop vs the vmapped batched
+engine vs the fused-Pallas-kernel backend.
 
 Two measurements (paper §6 distributions):
 
   * solve throughput — `repro.core.solver.solve` in a Python loop (the
     pre-engine path: build LP, dense two-phase simplex, NumPy ASAP replay,
     feasibility validation) vs `repro.engine.solve_bulk` (bucketed batched
-    simplex + vmapped replay), over a 1024-instance population of small
-    instances so the serial loop finishes in benchmark time;
+    simplex + vmapped replay) vs `solve_bulk(use_pallas=True)` (same bulk
+    path with the pivot loop and replay in the fused kernels), over a
+    1024-instance population of small instances so the serial loop finishes
+    in benchmark time;
   * replay throughput — `repro.core.simulator.simulate` in a loop vs the
-    vmapped ASAP simulator, on a campaign-scale sweep population (m=10,
-    5 loads in 5 installments — the §6 protocol sizes the sweeps actually
-    replay).
+    vmapped ASAP simulator vs the fused replay kernel, on a campaign-scale
+    sweep population (m=10, 5 loads in 5 installments — the §6 protocol
+    sizes the sweeps actually replay).
 
-Compile time is excluded from the batched numbers: one full warm-up call
-compiles every (bucket, batch) shape first, as a production service would
-reuse compiled shapes across ticks.  The acceptance bar is >= 10x
-instances/sec on the solve path.
+Compile time is excluded from the batched/pallas numbers: one full warm-up
+call compiles every (bucket, batch) shape first, as a production service
+would reuse compiled shapes across ticks.  The acceptance bar is >= 10x
+instances/sec on the batched solve path; the pallas columns are recorded for
+the same populations (off-TPU the kernels run in interpret mode, so their
+CPU numbers gauge the harness, not the silicon).
 """
 
 from __future__ import annotations
@@ -41,52 +46,54 @@ def _population(n: int, rng, m=M, n_loads=N_LOADS, q=Q) -> list:
     return [random_instance(rng, m=m, n_loads=n_loads, q=q) for _ in range(n)]
 
 
-def bench_solve(insts: list, serial_sample: int) -> tuple:
+def bench_solve(insts: list, serial_sample: int) -> tuple[dict, dict]:
     # serial: measure a sample and extrapolate (the whole point is that the
     # loop is too slow to run 1024 times inside a benchmark budget)
     t0 = time.perf_counter()
     for inst in insts[:serial_sample]:
         solve(inst, backend="simplex")
     serial_per = (time.perf_counter() - t0) / serial_sample
-    serial_ips = 1.0 / serial_per
+    out = {"serial": 1.0 / serial_per}
 
-    solve_bulk(insts)  # warm-up: compile the (bucket, batch) shapes
-    t0 = time.perf_counter()
-    res = solve_bulk(insts)
-    batched_dt = time.perf_counter() - t0
-    batched_ips = len(insts) / batched_dt
-    n_fallback = sum(1 for r in res if r.backend != "batched")
-    return serial_ips, batched_ips, batched_dt, n_fallback
+    n_fallback = {}
+    for label, use_pallas in (("batched", False), ("pallas", True)):
+        solve_bulk(insts, use_pallas=use_pallas)  # warm-up: compile shapes
+        t0 = time.perf_counter()
+        res = solve_bulk(insts, use_pallas=use_pallas)
+        out[label] = len(insts) / (time.perf_counter() - t0)
+        n_fallback[label] = sum(1 for r in res if r.backend != label)
+    return out, n_fallback
 
 
-def bench_replay(insts: list, gammas: list) -> tuple:
+def bench_replay(insts: list, gammas: list) -> dict:
     t0 = time.perf_counter()
     for inst, g in zip(insts, gammas):
         simulate(inst, g)
-    serial_dt = time.perf_counter() - t0
+    out = {"serial": len(insts) / (time.perf_counter() - t0)}
 
-    arena = InstanceArena(insts, pad_shapes=True)
-    for bucket in arena.buckets:  # warm-up per shape
-        simulate_bucket(bucket, bucket.gamma_padded(
-            [gammas[i] for i in bucket.indices]))
-    t0 = time.perf_counter()
-    makespans(insts, gammas)
-    batched_dt = time.perf_counter() - t0
-    return len(insts) / serial_dt, len(insts) / batched_dt
+    for label, use_pallas in (("batched", False), ("pallas", True)):
+        arena = InstanceArena(insts, pad_shapes=True)
+        for bucket in arena.buckets:  # warm-up per shape
+            simulate_bucket(bucket, bucket.gamma_padded(
+                [gammas[i] for i in bucket.indices]), use_pallas=use_pallas)
+        t0 = time.perf_counter()
+        makespans(insts, gammas, use_pallas=use_pallas)
+        out[label] = len(insts) / (time.perf_counter() - t0)
+    return out
 
 
 def main(quick: bool = False) -> dict:
-    banner("bench_engine_throughput (batched engine vs serial NumPy)")
+    banner("bench_engine_throughput (serial NumPy vs batched vs pallas)")
     rng = np.random.default_rng(0)
     n = 128 if quick else N_INSTANCES
     insts = _population(n, rng)
 
-    serial_ips, batched_ips, batched_dt, n_fallback = bench_solve(
-        insts, serial_sample=min(32, n))
-    speedup = batched_ips / serial_ips
-    print(f"  solve:  serial {serial_ips:8.1f} inst/s   "
-          f"batched {batched_ips:8.1f} inst/s   speedup {speedup:6.1f}x   "
-          f"({n} instances in {batched_dt:.2f}s, {n_fallback} fallbacks)")
+    solve_ips, n_fallback = bench_solve(insts, serial_sample=min(32, n))
+    speedup = {k: solve_ips[k] / solve_ips["serial"] for k in ("batched", "pallas")}
+    print(f"  solve:  serial {solve_ips['serial']:8.1f} inst/s   "
+          f"batched {solve_ips['batched']:8.1f} inst/s ({speedup['batched']:.1f}x)   "
+          f"pallas {solve_ips['pallas']:8.1f} inst/s ({speedup['pallas']:.1f}x)   "
+          f"({n} instances, fallbacks {n_fallback})")
 
     # replay workload: SIMPLE-heuristic fractions over a campaign-scale
     # population (the heuristic-sweep shapes the batched simulator targets)
@@ -101,20 +108,32 @@ def main(quick: bool = False) -> dict:
             cols = [t for t, (l, _) in enumerate(cells) if l == ln]
             g[:, cols] /= len(cols)
         gammas.append(g)
-    sim_serial_ips, sim_batched_ips = bench_replay(replay_insts, gammas)
-    sim_speedup = sim_batched_ips / sim_serial_ips
-    print(f"  replay: serial {sim_serial_ips:8.1f} inst/s   "
-          f"batched {sim_batched_ips:8.1f} inst/s   speedup {sim_speedup:6.1f}x")
+    replay_ips = bench_replay(replay_insts, gammas)
+    replay_speedup = {k: replay_ips[k] / replay_ips["serial"]
+                      for k in ("batched", "pallas")}
+    print(f"  replay: serial {replay_ips['serial']:8.1f} inst/s   "
+          f"batched {replay_ips['batched']:8.1f} inst/s "
+          f"({replay_speedup['batched']:.1f}x)   "
+          f"pallas {replay_ips['pallas']:8.1f} inst/s "
+          f"({replay_speedup['pallas']:.1f}x)")
 
-    write_csv("engine_throughput.csv",
-              [["solve", serial_ips, batched_ips, speedup],
-               ["replay", sim_serial_ips, sim_batched_ips, sim_speedup]],
-              ["path", "serial_inst_per_sec", "batched_inst_per_sec", "speedup"])
+    write_csv(
+        "engine_throughput.csv",
+        [["solve", solve_ips["serial"], solve_ips["batched"],
+          solve_ips["pallas"], speedup["batched"], speedup["pallas"]],
+         ["replay", replay_ips["serial"], replay_ips["batched"],
+          replay_ips["pallas"], replay_speedup["batched"],
+          replay_speedup["pallas"]]],
+        ["path", "serial_inst_per_sec", "batched_inst_per_sec",
+         "pallas_inst_per_sec", "batched_speedup", "pallas_speedup"],
+    )
 
     claims = {
-        "solve_10x": speedup >= 10.0,
-        "no_fallbacks": n_fallback == 0,
-        "replay_10x": sim_speedup >= 10.0,
+        "solve_10x": speedup["batched"] >= 10.0,
+        "no_fallbacks": n_fallback["batched"] == 0,
+        "no_pallas_fallbacks": n_fallback["pallas"] == 0,
+        "replay_10x": replay_speedup["batched"] >= 10.0,
+        "pallas_solve_runs": solve_ips["pallas"] > 0.0,
     }
     for k, v in claims.items():
         print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'}")

@@ -14,8 +14,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale instance counts")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: quick mode over the engine-facing benches "
+                         "(three-way engine throughput + kernels) unless "
+                         "--only narrows it further")
     args = ap.parse_args(argv)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
     quick = not args.full
+    if args.smoke and not args.only:
+        args.only = "engine_throughput,kernels"
 
     from . import (bench_engine_throughput, bench_kernels, bench_latency_qstar,
                    bench_lp_scaling, bench_motivating_example, bench_table2,

@@ -37,6 +37,11 @@ print(f"registered solver backends: {available_backends()}")
 report = get_backend("simplex").solve(SolveRequest(instance=inst))
 print(f"simplex backend agrees: makespan = {report.makespan:.6f} "
       f"(status={report.status})")
+# the fused-kernel engine — what `launch/serve.py --plan-backend pallas`
+# serves with; parity with every other backend is fuzz-tested at <= 1e-9
+report_pl = get_backend("pallas").solve(SolveRequest(instance=inst))
+print(f"pallas backend agrees:  makespan = {report_pl.makespan:.6f} "
+      f"(backend={report_pl.backend}, status={report_pl.status})")
 for name, fn in [("SIMPLE", simple), ("SINGLEINST", single_inst),
                  ("MULTIINST", lambda i: multi_inst(i, cap=300))]:
     r = fn(example_instance(0.75))

@@ -17,7 +17,11 @@ Built-in backends:
                simplex if scipy is unavailable);
   "serial"   — alias of "auto" (the bulk-path name for "loop per instance");
   "batched"  — the JAX engine (repro.engine.service.BatchedBackend),
-               registered lazily so importing repro.core never imports jax.
+               registered lazily so importing repro.core never imports jax;
+  "pallas"   — the same engine with its hot loops in fused Pallas kernels
+               (repro.kernels.simplex_pivot / asap_replay); degrades to the
+               plain batched path when the kernels cannot run here, so the
+               entry is always safe to select.
 
 Every optimal solve is finished by an ASAP *replay* of the LP's fractions
 through the simulator: the replay is guaranteed feasible, its makespan can
@@ -320,8 +324,19 @@ def _batched_factory(cache=None):
     return BatchedBackend(cache=cache)
 
 
+def _pallas_factory(cache=None):
+    from repro.engine.service import PallasBackend  # deferred: jax import
+
+    # PallasBackend itself degrades to the plain batched path when the
+    # fused kernels cannot run here (scheduling_kernels_available probe),
+    # so selecting "pallas" is always safe; statuses and SolveReport
+    # fields are identical either way.
+    return PallasBackend(cache=cache)
+
+
 register_backend("simplex", SimplexBackend)
 register_backend("scipy", ScipyBackend)
 register_backend("auto", AutoBackend)
 register_backend("serial", AutoBackend)  # bulk-path alias: loop of auto solves
 register_backend("batched", _batched_factory)
+register_backend("pallas", _pallas_factory)

@@ -118,29 +118,39 @@ def _sim_batch(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma):
     )
 
 
-def simulate_bucket(bucket: PackedBucket, gamma: np.ndarray):
+def simulate_bucket(bucket: PackedBucket, gamma: np.ndarray,
+                    use_pallas: bool = False):
     """ASAP-replay a [B, m, T] fraction batch; returns (cs, ce, ps, pe, mk).
 
     ``gamma`` must already be padded to the bucket shape (see
     :meth:`PackedBucket.gamma_padded`); returned arrays are bucket-shaped —
     use :meth:`PackedBucket.unpad` to strip padding.
+
+    ``use_pallas=True`` runs the whole recurrence in the fused replay kernel
+    (repro.kernels.asap_replay) — one launch per bucket, everything
+    block-resident; results are parity-identical.  The linkless ``m == 1``
+    chain keeps the vmapped path (there is nothing to fuse).
     """
+    args_np = (
+        bucket.w_cell, bucket.z, bucket.latency, bucket.tau,
+        bucket.vcomm_cell, bucket.vcomp_cell, bucket.rel_cell,
+    )
     with enable_x64():
-        out = _sim_batch(
-            jnp.asarray(bucket.w_cell),
-            jnp.asarray(bucket.z),
-            jnp.asarray(bucket.latency),
-            jnp.asarray(bucket.tau),
-            jnp.asarray(bucket.vcomm_cell),
-            jnp.asarray(bucket.vcomp_cell),
-            jnp.asarray(bucket.rel_cell),
+        args = tuple(jnp.asarray(a) for a in args_np) + (
             jnp.asarray(bucket.cell_valid, dtype=jnp.float64),
             jnp.asarray(gamma, dtype=jnp.float64),
         )
+        if use_pallas and bucket.m >= 2:
+            from repro.kernels.ops import asap_replay  # deferred kernel import
+
+            out = asap_replay(*args)
+        else:
+            out = _sim_batch(*args)
         return tuple(np.asarray(o) for o in out)
 
 
-def simulate_many(instances: list, gammas: list, pad_shapes: bool = True) -> list:
+def simulate_many(instances: list, gammas: list, pad_shapes: bool = True,
+                  use_pallas: bool = False) -> list:
     """Batched counterpart of ``[simulate(i, g) for i, g in zip(...)]``.
 
     Returns a list of :class:`repro.core.schedule.Schedule` in caller order;
@@ -152,7 +162,7 @@ def simulate_many(instances: list, gammas: list, pad_shapes: bool = True) -> lis
     results = []
     for bucket in arena.buckets:
         g = bucket.gamma_padded([gammas[i] for i in bucket.indices])
-        cs, ce, ps, pe, mk = simulate_bucket(bucket, g)
+        cs, ce, ps, pe, mk = simulate_bucket(bucket, g, use_pallas=use_pallas)
         cs, ce = bucket.unpad(cs), bucket.unpad(ce)
         ps, pe = bucket.unpad(ps), bucket.unpad(pe)
         scheds = [
@@ -171,12 +181,13 @@ def simulate_many(instances: list, gammas: list, pad_shapes: bool = True) -> lis
     return arena.scatter(results)
 
 
-def makespans(instances: list, gammas: list, pad_shapes: bool = True) -> np.ndarray:
+def makespans(instances: list, gammas: list, pad_shapes: bool = True,
+              use_pallas: bool = False) -> np.ndarray:
     """Just the achieved makespans, [len(instances)] — the sweep fast path."""
     arena = InstanceArena(instances, pad_shapes=pad_shapes)
     per_bucket = []
     for bucket in arena.buckets:
         g = bucket.gamma_padded([gammas[i] for i in bucket.indices])
-        *_, mk = simulate_bucket(bucket, g)
+        *_, mk = simulate_bucket(bucket, g, use_pallas=use_pallas)
         per_bucket.append(list(np.asarray(mk)))
     return np.array(arena.scatter(per_bucket), dtype=np.float64)

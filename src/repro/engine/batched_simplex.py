@@ -151,14 +151,18 @@ def _phase(T, basis, ncols_price, max_iter, bland_after):
     return T, basis, it, status
 
 
-def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
+def _setup_one(c, A_ub, b_ub, A_eq, b_eq):
+    """Equilibrate + build the phase-1 tableau/basis for one LP.
+
+    Returns (T, basis, c_scaled, col_scale); T's objective row already holds
+    the phase-1 objective (sum of implicit artificials, priced out).
+    """
     n = c.shape[0]
     m_ub, m_eq = A_ub.shape[0], A_eq.shape[0]
     m_rows = m_ub + m_eq
 
     A = jnp.concatenate([A_ub, A_eq], axis=0) if m_rows else jnp.zeros((0, n))
     b = jnp.concatenate([b_ub, b_eq])
-    c_orig = c
     A, b, c, col_scale = _equilibrate(A, b, c)
     neg = b < 0
     A = jnp.where(neg[:, None], -A, A)
@@ -181,24 +185,28 @@ def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
     can_slack = jnp.concatenate([~neg[:m_ub], jnp.zeros(m_eq, dtype=bool)])
     basis = jnp.where(can_slack, n + rows, dummy + 1 + rows)
 
-    bland_after = max(200, 4 * (m_rows + 1))
-
-    # ---- phase 1: minimize the sum of (implicit) artificials ----
+    # ---- phase 1 objective: minimize the sum of (implicit) artificials ----
     # pricing out the basic artificials leaves obj = -sum of their rows; the
     # artificial columns themselves are never read again (no re-entry rule)
     art_basic = ~can_slack
     T = T.at[-1].set(-jnp.sum(jnp.where(art_basic[:, None], T[:m_rows], 0.0), axis=0))
-    T, basis, it1, st1 = _phase(T, basis, dummy, max_iter, bland_after)
-    infeasible = (st1 == _OPTIMAL) & (T[-1, -1] < -1e-7)
+    return T, basis, c, col_scale
 
-    # Zero-level artificials left basic after phase 1: the NumPy solver
-    # drives them out with up to m_rows extra pivots.  Rows whose structural
-    # and slack entries are all zero are redundant constraints — inert under
-    # further pivots — and retire safely onto the dummy column.  A *drivable*
-    # leftover (nonzero entries) is a degenerate corner that could go unsound
-    # if a later pivot pushed its implicit artificial positive, so those
-    # elements are flagged (status 4) and handed to the serial fallback
-    # rather than paying the drive-out passes batch-wide.
+
+def _between_phases(T, basis, st1, c_scaled, *, n, dummy):
+    """Phase-1 epilogue + phase-2 objective install for one tableau.
+
+    Zero-level artificials left basic after phase 1: the NumPy solver
+    drives them out with up to m_rows extra pivots.  Rows whose structural
+    and slack entries are all zero are redundant constraints — inert under
+    further pivots — and retire safely onto the dummy column.  A *drivable*
+    leftover (nonzero entries) is a degenerate corner that could go unsound
+    if a later pivot pushed its implicit artificial positive, so those
+    elements are flagged (status 4) and handed to the serial fallback
+    rather than paying the drive-out passes batch-wide.
+    """
+    m_rows = T.shape[0] - 1
+    infeasible = (st1 == _OPTIMAL) & (T[-1, -1] < -1e-7)
     is_art = basis > dummy
     zero_level = jnp.abs(T[:m_rows, -1]) <= 1e-9
     has_entries = jnp.any(jnp.abs(T[:m_rows, :dummy]) > 1e-9, axis=1)
@@ -207,12 +215,16 @@ def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
 
     # ---- phase 2: the user objective on the same tableau ----
     T = T.at[-1].set(0.0)
-    T = T.at[-1, :n].set(c)
+    T = T.at[-1, :n].set(c_scaled)
     # price out basic variables: obj -= sum_r obj[basis[r]] * T[r]
     coeff = T[-1][basis]  # [m_rows]  (0 for dummy-basic rows)
     T = T.at[-1].add(-coeff @ T[:m_rows])
-    T, basis, it2, st2 = _phase(T, basis, dummy, max_iter, bland_after)
+    return T, basis, infeasible, drivable_leftover
 
+
+def _extract_one(T, basis, col_scale, c_orig, infeasible, drivable_leftover,
+                 st1, st2, iters, *, n, dummy):
+    m_rows = T.shape[0] - 1
     xfull = jnp.zeros(dummy + 1).at[basis].set(T[:m_rows, -1])
     x = col_scale * xfull[:n]  # undo column scaling
     obj = c_orig @ x
@@ -225,7 +237,22 @@ def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
     bad = (status == 1) | (status == 4)
     x = jnp.where(bad, jnp.nan, x)
     obj = jnp.where(bad, jnp.nan, obj)
-    return x, obj, status, it1 + it2
+    return x, obj, status, iters
+
+
+def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
+    n = c.shape[0]
+    m_rows = A_ub.shape[0] + A_eq.shape[0]
+    dummy = n + A_ub.shape[0]
+    bland_after = max(200, 4 * (m_rows + 1))
+
+    T, basis, c_s, col_scale = _setup_one(c, A_ub, b_ub, A_eq, b_eq)
+    T, basis, it1, st1 = _phase(T, basis, dummy, max_iter, bland_after)
+    T, basis, infeasible, drivable = _between_phases(
+        T, basis, st1, c_s, n=n, dummy=dummy)
+    T, basis, it2, st2 = _phase(T, basis, dummy, max_iter, bland_after)
+    return _extract_one(T, basis, col_scale, c, infeasible, drivable,
+                        st1, st2, it1 + it2, n=n, dummy=dummy)
 
 
 @partial(jax.jit, static_argnums=(5,))
@@ -235,13 +262,76 @@ def _solve_batch(c, A_ub, b_ub, A_eq, b_eq, max_iter):
     )
 
 
+def _phase_stack(T, basis, ncols_price, max_iter, bland_after, interpret):
+    """The Pallas phase driver: one fused pivot kernel per iteration over the
+    whole [B, R, C] stack, looping until every element is done.
+
+    Semantically identical to ``jax.vmap(_phase)``: the while_loop's batching
+    rule masks finished lanes there; here the kernel masks them via the
+    in-kernel ``active`` predicate (their rank-1 update is zeroed wholesale).
+    """
+    from repro.kernels.ops import simplex_pivot  # deferred: keep the vmapped
+
+    # path importable without the kernels package
+
+    B = T.shape[0]
+    status = jnp.full((B,), _RUNNING, jnp.int32)
+
+    def cond(carry):
+        _, _, it, status = carry
+        return jnp.any((status == _RUNNING) & (it < max_iter))
+
+    def body(carry):
+        T, basis, it, status = carry
+        return tuple(simplex_pivot(
+            T, basis, it, status, ncols_price=ncols_price,
+            bland_after=bland_after, max_iter=max_iter, interpret=interpret,
+        ))
+
+    T, basis, it, status = lax.while_loop(
+        cond, body, (T, basis, jnp.zeros((B,), jnp.int32), status)
+    )
+    status = jnp.where(status == _RUNNING, jnp.int32(_ITER_LIMIT), status)
+    return T, basis, it, status
+
+
+@partial(jax.jit, static_argnums=(5, 6))
+def _solve_batch_pallas(c, A_ub, b_ub, A_eq, b_eq, max_iter, interpret):
+    """The fused-kernel twin of ``_solve_batch``: identical setup, inter-phase
+    bookkeeping, and extraction (shared, vmapped), with both pivot phases run
+    by the Pallas kernel over the stacked tableaux."""
+    n = c.shape[1]
+    m_ub, m_eq = A_ub.shape[1], A_eq.shape[1]
+    m_rows = m_ub + m_eq
+    dummy = n + m_ub
+    bland_after = max(200, 4 * (m_rows + 1))
+
+    T, basis, c_s, col_scale = jax.vmap(_setup_one)(c, A_ub, b_ub, A_eq, b_eq)
+    T, basis, it1, st1 = _phase_stack(
+        T, basis, dummy, max_iter, bland_after, interpret)
+    T, basis, infeasible, drivable = jax.vmap(
+        partial(_between_phases, n=n, dummy=dummy))(T, basis, st1, c_s)
+    T, basis, it2, st2 = _phase_stack(
+        T, basis, dummy, max_iter, bland_after, interpret)
+    return jax.vmap(partial(_extract_one, n=n, dummy=dummy))(
+        T, basis, col_scale, c, infeasible, drivable, st1, st2, it1 + it2)
+
+
 def solve_simplex_batched(
-    c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, max_iter: int = 20_000
+    c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, max_iter: int = 20_000,
+    use_pallas: bool = False, interpret: bool | None = None,
 ) -> BatchedSimplexResult:
     """Solve a batch of LPs of identical shape.
 
     Arguments are batched along axis 0: c [B, n], A_ub [B, mu, n], b_ub
     [B, mu], A_eq [B, me, n], b_eq [B, me]; pass None for absent families.
+
+    ``use_pallas=True`` runs both pivot phases through the fused Pallas
+    kernel (repro.kernels.simplex_pivot) over the stacked tableaux; results
+    are identical (parity-tested) — setup, inter-phase bookkeeping, and
+    extraction are shared code.  ``interpret`` follows the kernels' usual
+    gate (None = interpret off-TPU).  LPs with no constraint rows keep the
+    vmapped path (an empty tableau has nothing to fuse).
     """
     c = np.asarray(c, dtype=np.float64)
     B, n = c.shape
@@ -251,11 +341,21 @@ def solve_simplex_batched(
     b_eq = np.zeros((B, 0)) if b_eq is None else np.asarray(b_eq, dtype=np.float64)
     if A_ub.shape[0] != B or A_eq.shape[0] != B:
         raise ValueError("batch dims disagree")
+    m_rows = A_ub.shape[1] + A_eq.shape[1]
     with enable_x64():
-        x, obj, status, iters = _solve_batch(
-            jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
-            jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
-        )
+        if use_pallas and m_rows > 0:
+            from repro.kernels.ops import _interp  # the kernels' TPU gate
+
+            x, obj, status, iters = _solve_batch_pallas(
+                jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
+                jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
+                _interp(interpret),
+            )
+        else:
+            x, obj, status, iters = _solve_batch(
+                jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
+                jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
+            )
         return BatchedSimplexResult(
             x=np.asarray(x),
             objective=np.asarray(obj),

@@ -37,7 +37,7 @@ from .batched_sim import simulate_bucket
 from .batched_simplex import solve_simplex_batched
 from .cache import CachedSolution, SolutionCache
 
-__all__ = ["solve_bulk", "BatchedBackend", "PlanService"]
+__all__ = ["solve_bulk", "BatchedBackend", "PallasBackend", "PlanService"]
 
 _REPLAY_TOL = 1e-6
 
@@ -65,6 +65,7 @@ def solve_bulk(
     cache: SolutionCache | None = None,
     fallback: bool = True,
     validate: bool = True,
+    use_pallas: bool = False,
 ) -> list:
     """Solve many instances at once; returns ``LPResult``s in caller order.
 
@@ -72,7 +73,13 @@ def solve_bulk(
     objectives delegate to the serial solver per instance.  ``validate``
     is forwarded to the serial solver on the (rare) uncertified-element
     fallback — the batched path itself always certifies by replay.
+
+    ``use_pallas=True`` routes the simplex pivots and the ASAP replay
+    through the fused Pallas kernels (repro.kernels.simplex_pivot /
+    asap_replay); results and statuses are parity-identical to the vmapped
+    path, only the reported ``backend`` label changes to ``"pallas"``.
     """
+    label = "pallas" if use_pallas else "batched"
     if objective != "makespan":
         return [solve(inst, objective=objective, validate=validate) for inst in instances]
 
@@ -85,7 +92,7 @@ def solve_bulk(
             sol = cache.get(keys[i])
             if sol is not None:
                 results[i] = _result_from_gamma(
-                    inst, sol.gamma, sol.lp_makespan, "batched+cache"
+                    inst, sol.gamma, sol.lp_makespan, label + "+cache"
                 )
                 continue
         pending.append(i)
@@ -98,13 +105,15 @@ def solve_bulk(
         lp = build_lp_bucket(bucket)
         c = np.tile(lp.c, (B, 1))  # objective pattern is bucket-constant
 
-        res = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+        res = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq,
+                                    use_pallas=use_pallas)
 
         gammas = lp.gamma_of(res.x)
         lp_mks = lp.makespan_of(res.x)
 
         # replay every solved gamma through the batched ASAP simulator
-        cs, ce, ps, pe, mk = simulate_bucket(bucket, bucket.gamma_padded(list(gammas)))
+        cs, ce, ps, pe, mk = simulate_bucket(
+            bucket, bucket.gamma_padded(list(gammas)), use_pallas=use_pallas)
 
         for b in range(B):
             gi = pending[bucket.indices[b]]
@@ -138,11 +147,11 @@ def solve_bulk(
                 makespan=float(mk[b]),
             )
             results[gi] = _result_from_gamma(
-                inst, gammas[b], lp_mks[b], "batched", sched=sched
+                inst, gammas[b], lp_mks[b], label, sched=sched
             )
             if cache is not None:
                 cache.put(keys[gi], CachedSolution(
-                    gamma=gammas[b], lp_makespan=float(lp_mks[b]), backend="batched"
+                    gamma=gammas[b], lp_makespan=float(lp_mks[b]), backend=label
                 ))
     return results
 
@@ -159,6 +168,7 @@ class BatchedBackend(SolverBackend):
     """
 
     name = "batched"
+    use_pallas = False  # subclass hook: route through the fused Pallas kernels
 
     def __init__(self, cache: SolutionCache | None = None, fallback: bool = True):
         super().__init__(cache=cache)
@@ -187,6 +197,7 @@ class BatchedBackend(SolverBackend):
                 cache=self.cache,
                 fallback=self.fallback,
                 validate=validate,
+                use_pallas=self.use_pallas,
             )
             for i, res in zip(bulk_idxs, results):
                 reports[i] = SolveReport.from_result(res, requests[i])
@@ -194,6 +205,29 @@ class BatchedBackend(SolverBackend):
             if reports[i] is None:
                 reports[i] = get_backend("auto").solve(req)
         return reports
+
+
+class PallasBackend(BatchedBackend):
+    """The batched engine with its hot loops in fused Pallas kernels.
+
+    Same bulk path, cache semantics, certification-by-replay, and serial
+    fallback contract as :class:`BatchedBackend` — the simplex pivots and
+    the ASAP replay just run in ``repro.kernels.simplex_pivot`` /
+    ``asap_replay`` (interpret-mode on CPU).  Statuses and every
+    :class:`SolveReport` field behave identically; ``report.backend`` says
+    ``"pallas"``.  When the kernels cannot run here at all (probed once via
+    ``scheduling_kernels_available``) the instance degrades to the plain
+    batched path instead of failing — the registry entry is always safe to
+    select.
+    """
+
+    name = "pallas"
+
+    def __init__(self, cache: SolutionCache | None = None, fallback: bool = True):
+        super().__init__(cache=cache, fallback=fallback)
+        from repro.kernels.ops import scheduling_kernels_available
+
+        self.use_pallas = scheduling_kernels_available()
 
 
 @dataclasses.dataclass
@@ -216,11 +250,21 @@ class PlanService:
         cache: SolutionCache | None = None,
         objective: str = "makespan",
         max_results: int = 65536,
+        backend: str = "batched",
     ):
         self.cache = cache if cache is not None else SolutionCache()
         self.objective = objective
         self.max_results = max_results
-        self.backend = BatchedBackend(cache=self.cache)
+        # the service always fronts an engine bulk backend; "pallas" swaps
+        # the hot loops for the fused kernels (same certification contract)
+        if backend == "pallas":
+            self.backend: BatchedBackend = PallasBackend(cache=self.cache)
+        elif backend == "batched":
+            self.backend = BatchedBackend(cache=self.cache)
+        else:
+            raise ValueError(
+                f"PlanService fronts the engine backends ('batched', 'pallas'); got {backend!r}"
+            )
         self._queue: list[SolveRequest] = []
         self._results: list = []
         self._base = 0  # absolute ticket index of _results[0]

@@ -1,0 +1,137 @@
+"""Pallas ASAP-replay kernel: the constraint-(1)-(10) recurrence of
+``repro.core.simulator`` for one packed bucket, one kernel launch.
+
+Each grid step replays one batch element with every per-instance array
+([m, T] fractions and durations, [m-1] link parameters) block-resident, so
+the whole recurrence — duration build, the store-and-forward link chain, the
+computation fronts — runs without a single intermediate HBM round trip.  The
+vmapped ``lax.scan`` reference (``repro.engine.batched_sim``) materializes
+the per-cell carries between XLA ops instead; on the sweep workloads the
+replay is bandwidth-bound, which is exactly what the fusion buys back.
+
+The recurrence per cell ``t`` (identical to the NumPy/vmapped references):
+
+    cs[i,t] = max(rel_t if i==0, ce[i-1,t], ce[i,t-1], ce[i+1,t-1])
+    ce[i,t] = cs[i,t] + dcomm[i,t]
+    ps[i,t] = max(tau_i | pe[i,t-1],  rel_t if i==0 else ce[i-1,t])
+    pe[i,t] = ps[i,t] + dcomp[i,t]
+
+Padded cells carry zero durations with their latency term masked by
+``valid`` (see arena.py), so they can never push any time past the real
+makespan; the cell loop therefore runs the full padded ``T`` unconditionally.
+
+Requires ``m >= 2`` (the ``m == 1`` chain has no links — callers fall back
+to the vmapped path, where the empty link scan is free).  The pure-jnp
+oracle is :func:`repro.kernels.ref.asap_replay_ref`; ``interpret=True`` runs
+this body on CPU (``ops._interp``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["asap_replay_kernel", "asap_replay_call"]
+
+_NEG = -jnp.inf  # identity for max over absent lower bounds
+
+
+def asap_replay_kernel(
+    w_ref, z_ref, lat_ref, tau_ref, vcomm_ref, vcomp_ref, rel_ref, valid_ref,
+    gamma_ref, cs_ref, ce_ref, ps_ref, pe_ref, mk_ref,
+):
+    w = w_ref[0]  # [m, T]
+    z = z_ref[0]  # [m-1]
+    lat = lat_ref[0]  # [m-1]
+    tau = tau_ref[0]  # [m]
+    vcomm = vcomm_ref[0]  # [T]
+    vcomp = vcomp_ref[0]  # [T]
+    rel = rel_ref[0]  # [T]
+    valid = valid_ref[...]  # [T] — shared across the batch
+    gamma = gamma_ref[0]  # [m, T]
+    m, T = gamma.shape
+
+    # durations (same math as schedule.comm_durations / comp_durations):
+    # suffix[i] = sum_{k >= i} gamma[k] — the volume still to forward past i
+    suffix = jnp.cumsum(gamma[::-1], axis=0)[::-1]
+    dcomm = (z[:, None] * vcomm[None, :] * suffix[1:, :] + lat[:, None]) * valid[None, :]
+    dcomp = w * vcomp[None, :] * gamma
+
+    link_idx = jax.lax.broadcasted_iota(jnp.int32, (m - 1, 1), 0)[:, 0]
+
+    def cell(t, carry):
+        prev_ce, prev_pe = carry  # [m-1], [m]
+        dcm_t = jax.lax.dynamic_slice_in_dim(dcomm, t, 1, axis=1)[:, 0]
+        dcp_t = jax.lax.dynamic_slice_in_dim(dcomp, t, 1, axis=1)[:, 0]
+        rel_t = jax.lax.dynamic_slice_in_dim(rel, t, 1)[0]
+
+        # lower bounds known before the intra-cell chain: (2b)/(3b) own-port
+        # + (2)/(3) receive-after-forward + the head's release date
+        ready = jnp.maximum(
+            prev_ce,
+            jnp.concatenate([prev_ce[1:], jnp.full((1,), _NEG, prev_ce.dtype)]),
+        )
+        ready = jnp.where(link_idx == 0, jnp.maximum(ready, rel_t), ready)
+
+        def link(i, lc):
+            up_ce, cs_v, ce_v = lc
+            ready_i = jax.lax.dynamic_slice_in_dim(ready, i, 1)[0]
+            dcm_i = jax.lax.dynamic_slice_in_dim(dcm_t, i, 1)[0]
+            lo = jnp.maximum(ready_i, jnp.where(i == 0, 0.0, up_ce))  # (1)
+            lo = jnp.maximum(lo, 0.0)
+            ce_i = lo + dcm_i
+            cs_v = jax.lax.dynamic_update_slice_in_dim(cs_v, lo[None], i, axis=0)
+            ce_v = jax.lax.dynamic_update_slice_in_dim(ce_v, ce_i[None], i, axis=0)
+            return ce_i, cs_v, ce_v
+
+        zeros = jnp.zeros(m - 1, prev_ce.dtype)
+        _, cs_t, ce_t = jax.lax.fori_loop(
+            0, m - 1, link, (jnp.asarray(_NEG, prev_ce.dtype), zeros, zeros)
+        )
+
+        # computations: (8)/(9)+(10) via prev_pe (initialized to tau), (6)
+        ps_t = jnp.maximum(prev_pe, jnp.concatenate([rel_t[None], ce_t]))
+        pe_t = ps_t + dcp_t
+
+        cs_ref[0, :, pl.ds(t, 1)] = cs_t[:, None]
+        ce_ref[0, :, pl.ds(t, 1)] = ce_t[:, None]
+        ps_ref[0, :, pl.ds(t, 1)] = ps_t[:, None]
+        pe_ref[0, :, pl.ds(t, 1)] = pe_t[:, None]
+        return ce_t, pe_t
+
+    init = (jnp.zeros(m - 1, gamma.dtype), tau)
+    _, last_pe = jax.lax.fori_loop(0, T, cell, init)
+    mk_ref[0] = jnp.max(last_pe)
+
+
+def asap_replay_call(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
+                     *, interpret: bool = False):
+    """Replay a packed bucket: w_cell/gamma [B,m,T], z/latency [B,m-1],
+    tau [B,m], vcomm/vcomp/rel [B,T], valid [T] -> (cs, ce, ps, pe, mk)."""
+    B, m, T = gamma.shape
+    if m < 2:
+        raise ValueError("asap_replay kernel needs m >= 2 (no links otherwise)")
+    dt = gamma.dtype
+    spec_mT = pl.BlockSpec((1, m, T), lambda b: (b, 0, 0))
+    spec_links = pl.BlockSpec((1, m - 1), lambda b: (b, 0))
+    spec_m = pl.BlockSpec((1, m), lambda b: (b, 0))
+    spec_T = pl.BlockSpec((1, T), lambda b: (b, 0))
+    spec_shared = pl.BlockSpec((T,), lambda b: (0,))
+    spec_lT = pl.BlockSpec((1, m - 1, T), lambda b: (b, 0, 0))
+    spec_scalar = pl.BlockSpec((1,), lambda b: (b,))
+    return pl.pallas_call(
+        asap_replay_kernel,
+        grid=(B,),
+        in_specs=[spec_mT, spec_links, spec_links, spec_m,
+                  spec_T, spec_T, spec_T, spec_shared, spec_mT],
+        out_specs=[spec_lT, spec_lT, spec_mT, spec_mT, spec_scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, m - 1, T), dt),
+            jax.ShapeDtypeStruct((B, m - 1, T), dt),
+            jax.ShapeDtypeStruct((B, m, T), dt),
+            jax.ShapeDtypeStruct((B, m, T), dt),
+            jax.ShapeDtypeStruct((B,), dt),
+        ],
+        interpret=interpret,
+    )(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma)

@@ -13,12 +13,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .asap_replay import asap_replay_call
 from .decode_attention import decode_attention_call
 from .flash_attention import flash_attention_call
 from .rmsnorm import rmsnorm_call
+from .simplex_pivot import simplex_pivot_call
 from .ssd_scan import ssd_scan_call
 
-__all__ = ["flash_attention", "decode_attention", "ssd_scan", "rms_norm"]
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "ssd_scan",
+    "rms_norm",
+    "simplex_pivot",
+    "asap_replay",
+    "scheduling_kernels_available",
+]
 
 
 def _interp(interpret):
@@ -78,3 +88,52 @@ def ssd_scan(x, dt, A, B, C, D, *, chunk=64, interpret=None):
 @partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rms_norm(x, w, *, eps=1e-5, block_rows=256, interpret=None):
     return rmsnorm_call(x, w, eps=eps, block_rows=block_rows, interpret=_interp(interpret))
+
+
+@partial(jax.jit, static_argnames=("ncols_price", "bland_after", "max_iter", "interpret"))
+def simplex_pivot(T, basis, it, status, *, ncols_price, bland_after, max_iter,
+                  interpret=None):
+    """One fused masked pivot over a [B, R, C] tableau stack (see
+    simplex_pivot.py); the batched-simplex hot loop calls this per iteration."""
+    return simplex_pivot_call(
+        T, basis, it, status, ncols_price=ncols_price, bland_after=bland_after,
+        max_iter=max_iter, interpret=_interp(interpret),
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def asap_replay(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma, *,
+                interpret=None):
+    """Fused ASAP replay of a packed bucket (see asap_replay.py); needs m >= 2."""
+    return asap_replay_call(
+        w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
+        interpret=_interp(interpret),
+    )
+
+
+_SCHED_KERNELS_OK: bool | None = None
+
+
+def scheduling_kernels_available() -> bool:
+    """True when the Pallas scheduling kernels can actually run here.
+
+    Probes once with a tiny pivot call (interpret-gated like every other
+    call site) and caches the answer; the ``pallas`` solver backend uses
+    this to fall back to the plain batched engine instead of failing."""
+    global _SCHED_KERNELS_OK
+    if _SCHED_KERNELS_OK is None:
+        try:
+            from jax.experimental import enable_x64
+
+            with enable_x64():
+                T = jnp.zeros((1, 2, 3), jnp.float64).at[:, -1, 0].set(-1.0)
+                T = T.at[:, 0, 0].set(1.0).at[:, 0, -1].set(1.0)
+                out = simplex_pivot(
+                    T, jnp.ones((1, 1), jnp.int32), jnp.zeros(1, jnp.int32),
+                    jnp.full(1, -1, jnp.int32),
+                    ncols_price=2, bland_after=10, max_iter=10,
+                )
+                _SCHED_KERNELS_OK = int(out[3][0]) in (-1, 0, 2)
+        except Exception:  # pragma: no cover - platform-dependent
+            _SCHED_KERNELS_OK = False
+    return _SCHED_KERNELS_OK

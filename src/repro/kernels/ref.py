@@ -9,7 +9,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "decode_attention_ref", "ssd_scan_ref", "rms_norm_ref"]
+__all__ = [
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "ssd_scan_ref",
+    "rms_norm_ref",
+    "simplex_pivot_ref",
+    "asap_replay_ref",
+]
 
 NEG_INF = -1e30
 
@@ -86,3 +93,82 @@ def rms_norm_ref(x, w, eps=1e-5):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def simplex_pivot_ref(T, basis, it, status, *, ncols_price, bland_after, max_iter):
+    """One masked simplex pivot per batch element, element-by-element.
+
+    T [B,R,C], basis [B,R-1], it/status [B] -> the advanced stack.  Dantzig
+    pricing with a Bland fallback after ``bland_after``; ratio test tie-broken
+    on the smallest basis index; finished/exhausted elements pass through.
+    Statuses: -1 running, 0 optimal, 2 unbounded.
+    """
+    eps = 1e-9
+    T_out, basis_out, it_out, status_out = [], [], [], []
+    for b in range(T.shape[0]):
+        Tb, bb, itb, stb = T[b], basis[b], it[b], status[b]
+        m_rows = Tb.shape[0] - 1
+        if not (stb == -1 and itb < max_iter):  # finished: identity
+            T_out.append(Tb), basis_out.append(bb)
+            it_out.append(itb), status_out.append(stb)
+            continue
+        obj = Tb[-1, :ncols_price]
+        neg = obj < -eps
+        if not bool(jnp.any(neg)):
+            T_out.append(Tb), basis_out.append(bb)
+            it_out.append(itb), status_out.append(jnp.int32(0))
+            continue
+        if itb < bland_after:
+            col = int(jnp.argmin(obj))
+        else:
+            col = int(jnp.argmin(jnp.where(neg, jnp.arange(ncols_price), ncols_price)))
+        colvals = Tb[:m_rows, col]
+        pos = colvals > eps
+        ratios = jnp.where(pos, Tb[:m_rows, -1] / jnp.where(pos, colvals, 1.0), jnp.inf)
+        best = jnp.min(ratios)
+        if not bool(jnp.isfinite(best)):
+            T_out.append(Tb), basis_out.append(bb)
+            it_out.append(itb), status_out.append(jnp.int32(2))
+            continue
+        ties = jnp.abs(ratios - best) <= 1e-12
+        row = int(jnp.argmin(jnp.where(ties, bb, jnp.iinfo(jnp.int32).max)))
+        piv = Tb[row, col]
+        Tb = Tb.at[row].divide(piv)
+        colv = Tb[:, col].at[row].set(0.0)
+        Tb = Tb - colv[:, None] * Tb[row][None, :]
+        T_out.append(Tb), basis_out.append(bb.at[row].set(col))
+        it_out.append(itb + 1), status_out.append(jnp.int32(-1))
+    return (jnp.stack(T_out), jnp.stack(basis_out),
+            jnp.stack(it_out).astype(it.dtype), jnp.stack(status_out).astype(status.dtype))
+
+
+def asap_replay_ref(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma):
+    """Step-by-step ASAP replay: w_cell/gamma [B,m,T], z/latency [B,m-1],
+    tau [B,m], vcomm/vcomp/rel [B,T], valid [T] -> (cs, ce, ps, pe, mk)."""
+    B, m, T = gamma.shape
+    cs = jnp.zeros((B, m - 1, T))
+    ce = jnp.zeros((B, m - 1, T))
+    ps = jnp.zeros((B, m, T))
+    pe = jnp.zeros((B, m, T))
+    for b in range(B):
+        suffix = jnp.cumsum(gamma[b, ::-1], axis=0)[::-1]
+        dcomm = (z[b][:, None] * vcomm[b][None, :] * suffix[1:, :]
+                 + latency[b][:, None]) * valid[None, :]
+        dcomp = w_cell[b] * vcomp[b][None, :] * gamma[b]
+        for t in range(T):
+            for i in range(m - 1):
+                lo = rel[b, t] if i == 0 else ce[b, i - 1, t]
+                if t > 0:
+                    lo = jnp.maximum(lo, ce[b, i, t - 1])  # (2b)/(3b) own-port
+                    if i + 1 <= m - 2:
+                        lo = jnp.maximum(lo, ce[b, i + 1, t - 1])  # (2)/(3)
+                lo = jnp.maximum(lo, 0.0)
+                cs = cs.at[b, i, t].set(lo)
+                ce = ce.at[b, i, t].set(lo + dcomm[i, t])
+            for i in range(m):
+                start = tau[b, i] if t == 0 else pe[b, i, t - 1]
+                recv = rel[b, t] if i == 0 else ce[b, i - 1, t]
+                s = jnp.maximum(start, recv)
+                ps = ps.at[b, i, t].set(s)
+                pe = pe.at[b, i, t].set(s + dcomp[i, t])
+    return cs, ce, ps, pe, jnp.max(pe[:, :, -1], axis=1)

@@ -1,0 +1,133 @@
+"""Pallas fused simplex-pivot kernel: one full pivot iteration for a whole
+``[B, R, C]`` tableau stack in a single pass.
+
+Per grid step (one batch element, tableau block-resident in VMEM) the kernel
+fuses what the vmapped jnp path runs as separate HBM-roundtripping ops:
+
+  1. *Dantzig pricing* over the objective row (with the Bland fallback after
+     ``bland_after`` iterations — same anti-cycling rule as
+     ``repro.engine.batched_simplex``);
+  2. the *ratio test* over the entering column, tie-broken on the smallest
+     basis index (the NumPy solver's rule);
+  3. the fused rank-1 update ``T -= outer(pcol', prow)`` where ``pcol'``
+     carries ``piv - 1`` at the pivot row, so eliminating the column and
+     rescaling the pivot row are one pass over the tableau.
+
+Finished batch elements (status != running, or out of iteration budget) are
+masked *in-kernel*: their ``pcol'`` is zeroed wholesale, so the rank-1 update
+is the identity and their tableau/basis/counters pass through unchanged.
+
+Column/row gathers use one-hot contractions (``T @ e_col``, ``e_row @ T``)
+instead of dynamic gathers — MXU-friendly on TPU, and bit-exact (the one-hot
+sums add exact zeros), which is what keeps the Pallas backend's pivots
+bit-identical to the vmapped reference.
+
+The pure-jnp oracle lives in :func:`repro.kernels.ref.simplex_pivot_ref`;
+``interpret=True`` (the default off-TPU, see ``ops._interp``) runs this same
+kernel body on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["simplex_pivot_kernel", "simplex_pivot_call"]
+
+_EPS = 1e-9
+_RUNNING = -1
+_OPTIMAL = 0
+_UNBOUNDED = 2
+
+
+def simplex_pivot_kernel(
+    T_ref, basis_ref, it_ref, status_ref,
+    To_ref, basiso_ref, ito_ref, statuso_ref,
+    *, ncols_price: int, bland_after: int, max_iter: int,
+):
+    T = T_ref[0]  # [R, C]: rows = constraints + objective, cols = ... + rhs
+    basis = basis_ref[0]  # [R-1] basic-variable ids
+    it = it_ref[0]
+    status = status_ref[0]
+    R, C = T.shape
+    m_rows = R - 1
+    active = (status == _RUNNING) & (it < max_iter)
+
+    # ---- pricing: Dantzig, Bland after the anti-cycling threshold ----
+    obj = T[-1, :ncols_price]
+    neg = obj < -_EPS
+    any_neg = jnp.any(neg)
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (ncols_price, 1), 0)[:, 0]
+    dantzig = jnp.argmin(obj)
+    bland = jnp.argmin(jnp.where(neg, cidx, ncols_price))
+    col = jnp.where(it < bland_after, dantzig, bland).astype(jnp.int32)
+
+    # ---- entering column via one-hot contraction (exact, no gather) ----
+    e_col = (jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)[:, 0] == col)
+    pcol_full = T @ e_col.astype(T.dtype)  # [R]
+    colvals = pcol_full[:m_rows]
+
+    # ---- ratio test, tie-break on smallest basis index ----
+    pos = colvals > _EPS
+    ratios = jnp.where(pos, T[:m_rows, -1] / jnp.where(pos, colvals, 1.0), jnp.inf)
+    best = jnp.min(ratios)
+    unbounded = ~jnp.isfinite(best)
+    ties = jnp.abs(ratios - best) <= 1e-12
+    row = jnp.argmin(
+        jnp.where(ties, basis, jnp.iinfo(jnp.int32).max)
+    ).astype(jnp.int32)
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (m_rows, 1), 0)[:, 0]
+    e_row = (ridx == row).astype(T.dtype)
+
+    do_pivot = active & any_neg & ~unbounded
+
+    # ---- fused masked rank-1 update ----
+    piv = jnp.where(do_pivot, e_row @ colvals, 1.0)
+    prow = (e_row @ T[:m_rows]) / piv  # [C] — the pivot row, pre-scaled
+    full_ridx = jax.lax.broadcasted_iota(jnp.int32, (R, 1), 0)[:, 0]
+    pcol = jnp.where(full_ridx == row, piv - 1.0, pcol_full)
+    pcol = jnp.where(do_pivot, pcol, 0.0)  # mask finished elements wholesale
+    To_ref[0] = T - pcol[:, None] * prow[None, :]
+
+    basiso_ref[0] = jnp.where(
+        do_pivot & (ridx == row), col.astype(basis.dtype), basis
+    )
+    new_status = jnp.where(
+        ~any_neg,
+        jnp.int32(_OPTIMAL),
+        jnp.where(unbounded, jnp.int32(_UNBOUNDED), jnp.int32(_RUNNING)),
+    )
+    statuso_ref[0] = jnp.where(active, new_status, status)
+    ito_ref[0] = it + jnp.where(do_pivot, jnp.int32(1), jnp.int32(0))
+
+
+def simplex_pivot_call(
+    T, basis, it, status, *,
+    ncols_price: int, bland_after: int, max_iter: int, interpret: bool = False,
+):
+    """One masked pivot step for the stack: T [B,R,C], basis [B,R-1],
+    it/status [B] int32 -> the same pytree, advanced by <= 1 pivot each."""
+    B, R, C = T.shape
+    kernel = functools.partial(
+        simplex_pivot_kernel,
+        ncols_price=ncols_price, bland_after=bland_after, max_iter=max_iter,
+    )
+    spec_T = pl.BlockSpec((1, R, C), lambda b: (b, 0, 0))
+    spec_basis = pl.BlockSpec((1, R - 1), lambda b: (b, 0))
+    spec_scalar = pl.BlockSpec((1,), lambda b: (b,))
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[spec_T, spec_basis, spec_scalar, spec_scalar],
+        out_specs=[spec_T, spec_basis, spec_scalar, spec_scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct(T.shape, T.dtype),
+            jax.ShapeDtypeStruct(basis.shape, basis.dtype),
+            jax.ShapeDtypeStruct(it.shape, it.dtype),
+            jax.ShapeDtypeStruct(status.shape, status.dtype),
+        ],
+        interpret=interpret,
+    )(T, basis, it, status)

@@ -40,7 +40,8 @@ def main(argv=None):
                     help="also DLT-plan N request batches over a 4-stage chain")
     ap.add_argument("--plan-backend", default="batched",
                     help="solver-backend registry entry for --plan "
-                         "(see repro.core.available_backends())")
+                         "(see repro.core.available_backends()); 'pallas' "
+                         "runs the engine's solve/replay in fused kernels")
     ap.add_argument("--auto-t", type=int, default=0, metavar="T_MAX",
                     help="with --plan: sweep 1..T_MAX installments through "
                          "the engine and report the cost-aware T*")
@@ -104,11 +105,12 @@ def main(argv=None):
         links = [LinkSpec(base_bw, 50e-6)] * 3
         loads = [BatchSpec(num_samples=args.batch, bytes_per_sample=4.0 * args.prompt_len,
                            flops_per_sample=fl) for _ in range(args.plan)]
-        use_engine = args.plan_backend == "batched"
-        if use_engine:  # the jax-backed engine + its solution cache
+        use_engine = args.plan_backend in ("batched", "pallas")
+        if use_engine:  # the jax-backed engine + its solution cache; "pallas"
+            # swaps the solve/replay hot loops for the fused kernels
             from repro.engine import PlanService
 
-            service = PlanService()
+            service = PlanService(backend=args.plan_backend)
             planner = Planner(stages, links, cache=service.cache)
         else:  # serial registry backends: no engine import, no cache
             planner = Planner(stages, links)

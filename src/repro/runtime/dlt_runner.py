@@ -50,9 +50,10 @@ class ChainReplanner:
     Owns a :class:`repro.core.planner.Planner` plus an engine solution cache
     (repro.engine): every replan — straggler drift, stage failure, or a bulk
     what-if sweep — is stated as a :class:`SolveRequest` and handed to the
-    ``backend`` registry entry (the batched engine by default), and platform
-    states the chain has seen before replay from the cache instead of
-    re-solving.
+    ``backend`` registry entry (the batched engine by default; ``"pallas"``
+    runs the same engine with its solve/replay hot loops in fused Pallas
+    kernels), and platform states the chain has seen before replay from the
+    cache instead of re-solving.
     """
 
     def __init__(self, planner: Planner, q: int | list = 2, backend="batched"):

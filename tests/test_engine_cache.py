@@ -1,0 +1,105 @@
+"""Regression tests for the quantized-hash LRU in ``repro.engine.cache``.
+
+The cache is the serving fast path (identical platform states replay
+instead of re-solving), so its three contracts get pinned here: the
+relative quantum groups indistinguishable instances and separates
+distinguishable ones, eviction is strictly LRU, and ``stats()`` counts what
+actually happened.
+"""
+
+import numpy as np
+
+from repro.core.instance import Chain, Instance, Loads
+from repro.engine.cache import CachedSolution, SolutionCache, instance_key
+
+
+def _instance(w_scale: float = 1.0, release: float = 0.0) -> Instance:
+    chain = Chain(w=np.array([0.5, 1.0, 2.0]) * w_scale, z=[0.1, 0.2],
+                  tau=0.0, latency=[1e-3, 2e-3])
+    loads = Loads(v_comm=[1.0, 2.0], v_comp=[3.0, 1.0], release=release)
+    return Instance(chain, loads, q=2)
+
+
+def _sol(tag: float) -> CachedSolution:
+    return CachedSolution(gamma=np.full((3, 4), tag), lp_makespan=tag,
+                          backend="batched")
+
+
+# ------------------------------------------------------------- quantization
+
+
+def test_sub_quantum_perturbation_shares_key():
+    # default quantum 1e-9 keeps ~9 significant digits: a 1e-13 relative
+    # wiggle is indistinguishable platform noise and must hit the same entry
+    a = _instance()
+    b = _instance(w_scale=1.0 + 1e-13)
+    assert instance_key(a) == instance_key(b)
+
+
+def test_super_quantum_perturbation_never_collides():
+    a = _instance()
+    for rel in (1e-6, 1e-4, 1e-2):
+        b = _instance(w_scale=1.0 + rel)
+        assert instance_key(a) != instance_key(b), rel
+
+
+def test_every_field_and_objective_feeds_the_key():
+    base = _instance()
+    assert instance_key(base) != instance_key(_instance(release=1.0))
+    assert instance_key(base) != instance_key(base, objective="completion")
+    assert instance_key(base) != instance_key(base.with_q(3))
+    w_per_load = np.ones((3, 2))
+    unrelated = Instance(base.chain, base.loads, q=base.q, w_per_load=w_per_load)
+    assert instance_key(base) != instance_key(unrelated)
+
+
+def test_cache_key_honors_custom_quantum():
+    cache = SolutionCache(quantum=1e-3)
+    a, b = _instance(), _instance(w_scale=1.0 + 1e-6)
+    assert cache.key(a) == cache.key(b)  # coarse quantum merges them
+    assert instance_key(a) != instance_key(b)  # default 1e-9 does not
+
+
+# ---------------------------------------------------------------- LRU order
+
+
+def test_eviction_order_is_lru():
+    cache = SolutionCache(max_entries=2)
+    ka, kb, kc = "a", "b", "c"
+    cache.put(ka, _sol(1.0))
+    cache.put(kb, _sol(2.0))
+    assert cache.get(ka).lp_makespan == 1.0  # touch a: b becomes oldest
+    cache.put(kc, _sol(3.0))  # evicts b, not a
+    assert cache.get(kb) is None
+    assert cache.get(ka).lp_makespan == 1.0
+    assert cache.get(kc).lp_makespan == 3.0
+    assert len(cache) == 2
+
+
+def test_put_refreshes_existing_entry():
+    cache = SolutionCache(max_entries=2)
+    cache.put("a", _sol(1.0))
+    cache.put("b", _sol(2.0))
+    cache.put("a", _sol(9.0))  # re-put refreshes both value and recency
+    cache.put("c", _sol(3.0))  # so b is the eviction victim
+    assert cache.get("b") is None
+    assert cache.get("a").lp_makespan == 9.0
+
+
+# -------------------------------------------------------------------- stats
+
+
+def test_stats_counts_hits_and_misses():
+    cache = SolutionCache(max_entries=4)
+    assert cache.stats() == {"entries": 0, "hits": 0, "misses": 0,
+                             "hit_rate": 0.0}
+    cache.get("nope")
+    cache.put("a", _sol(1.0))
+    cache.get("a")
+    cache.get("a")
+    cache.get("gone")
+    st = cache.stats()
+    assert st["entries"] == 1
+    assert st["hits"] == 2
+    assert st["misses"] == 2
+    assert st["hit_rate"] == 0.5
