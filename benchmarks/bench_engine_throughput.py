@@ -15,26 +15,23 @@ Two measurements (paper §6 distributions):
     sweep population (m=10, 5 loads in 5 installments — the §6 protocol
     sizes the sweeps actually replay).
 
-Compile time is excluded from the batched/pallas numbers: one full warm-up
-call compiles every (bucket, batch) shape first, as a production service
-would reuse compiled shapes across ticks.  The acceptance bar is >= 10x
-instances/sec on the batched solve path; the pallas columns are recorded for
-the same populations (off-TPU the kernels run in interpret mode, so their
-CPU numbers gauge the harness, not the silicon).
+The whole methodology — warm-up/compile exclusion, timing, the printed
+report, the CSV schema, and the claims convention — lives once, in
+benchmarks/common.py::three_way_bench, shared with bench_star; this module
+only supplies the chain populations.  The acceptance bar is >= 10x
+instances/sec on the batched solve path at full scale (smoke runs record
+the ratio informationally — see common.throughput_claims); the pallas
+columns are recorded for the same populations (off-TPU the kernels run in
+interpret mode, so their CPU numbers gauge the harness, not the silicon).
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core.instance import random_instance
-from repro.core.simulator import simulate
-from repro.core.solver import solve
-from repro.engine import InstanceArena, makespans, simulate_bucket, solve_bulk
 
-from .common import banner, write_csv
+from .common import three_way_bench
 
 N_INSTANCES = 1024
 M, N_LOADS, Q = 3, 2, 1  # small instances: the serial loop must finish
@@ -46,98 +43,16 @@ def _population(n: int, rng, m=M, n_loads=N_LOADS, q=Q) -> list:
     return [random_instance(rng, m=m, n_loads=n_loads, q=q) for _ in range(n)]
 
 
-def bench_solve(insts: list, serial_sample: int) -> tuple[dict, dict]:
-    # serial: measure a sample and extrapolate (the whole point is that the
-    # loop is too slow to run 1024 times inside a benchmark budget)
-    t0 = time.perf_counter()
-    for inst in insts[:serial_sample]:
-        solve(inst, backend="simplex")
-    serial_per = (time.perf_counter() - t0) / serial_sample
-    out = {"serial": 1.0 / serial_per}
-
-    n_fallback = {}
-    for label, use_pallas in (("batched", False), ("pallas", True)):
-        solve_bulk(insts, use_pallas=use_pallas)  # warm-up: compile shapes
-        t0 = time.perf_counter()
-        res = solve_bulk(insts, use_pallas=use_pallas)
-        out[label] = len(insts) / (time.perf_counter() - t0)
-        n_fallback[label] = sum(1 for r in res if r.backend != label)
-    return out, n_fallback
-
-
-def bench_replay(insts: list, gammas: list) -> dict:
-    t0 = time.perf_counter()
-    for inst, g in zip(insts, gammas):
-        simulate(inst, g)
-    out = {"serial": len(insts) / (time.perf_counter() - t0)}
-
-    for label, use_pallas in (("batched", False), ("pallas", True)):
-        arena = InstanceArena(insts, pad_shapes=True)
-        for bucket in arena.buckets:  # warm-up per shape
-            simulate_bucket(bucket, bucket.gamma_padded(
-                [gammas[i] for i in bucket.indices]), use_pallas=use_pallas)
-        t0 = time.perf_counter()
-        makespans(insts, gammas, use_pallas=use_pallas)
-        out[label] = len(insts) / (time.perf_counter() - t0)
-    return out
-
-
 def main(quick: bool = False) -> dict:
-    banner("bench_engine_throughput (serial NumPy vs batched vs pallas)")
     rng = np.random.default_rng(0)
-    n = 128 if quick else N_INSTANCES
-    insts = _population(n, rng)
-
-    solve_ips, n_fallback = bench_solve(insts, serial_sample=min(32, n))
-    speedup = {k: solve_ips[k] / solve_ips["serial"] for k in ("batched", "pallas")}
-    print(f"  solve:  serial {solve_ips['serial']:8.1f} inst/s   "
-          f"batched {solve_ips['batched']:8.1f} inst/s ({speedup['batched']:.1f}x)   "
-          f"pallas {solve_ips['pallas']:8.1f} inst/s ({speedup['pallas']:.1f}x)   "
-          f"({n} instances, fallbacks {n_fallback})")
-
-    # replay workload: SIMPLE-heuristic fractions over a campaign-scale
-    # population (the heuristic-sweep shapes the batched simulator targets)
-    replay_insts = _population(
-        128 if quick else N_REPLAY, rng, m=M_R, n_loads=N_LOADS_R, q=Q_R)
-    gammas = []
-    for inst in replay_insts:
-        speeds = 1.0 / inst.chain.w
-        g = np.tile((speeds / speeds.sum())[:, None], (1, inst.total_installments))
-        cells = list(inst.cells())
-        for ln in range(inst.N):
-            cols = [t for t, (l, _) in enumerate(cells) if l == ln]
-            g[:, cols] /= len(cols)
-        gammas.append(g)
-    replay_ips = bench_replay(replay_insts, gammas)
-    replay_speedup = {k: replay_ips[k] / replay_ips["serial"]
-                      for k in ("batched", "pallas")}
-    print(f"  replay: serial {replay_ips['serial']:8.1f} inst/s   "
-          f"batched {replay_ips['batched']:8.1f} inst/s "
-          f"({replay_speedup['batched']:.1f}x)   "
-          f"pallas {replay_ips['pallas']:8.1f} inst/s "
-          f"({replay_speedup['pallas']:.1f}x)")
-
-    write_csv(
-        "engine_throughput.csv",
-        [["solve", solve_ips["serial"], solve_ips["batched"],
-          solve_ips["pallas"], speedup["batched"], speedup["pallas"]],
-         ["replay", replay_ips["serial"], replay_ips["batched"],
-          replay_ips["pallas"], replay_speedup["batched"],
-          replay_speedup["pallas"]]],
-        ["path", "serial_inst_per_sec", "batched_inst_per_sec",
-         "pallas_inst_per_sec", "batched_speedup", "pallas_speedup"],
+    return three_way_bench(
+        "bench_engine_throughput (serial NumPy vs batched vs pallas)",
+        solve_insts=_population(128 if quick else N_INSTANCES, rng),
+        replay_insts=_population(128 if quick else N_REPLAY, rng,
+                                 m=M_R, n_loads=N_LOADS_R, q=Q_R),
+        csv_name="engine_throughput.csv",
+        quick=quick,
     )
-
-    claims = {
-        "solve_10x": speedup["batched"] >= 10.0,
-        "no_fallbacks": n_fallback["batched"] == 0,
-        "no_pallas_fallbacks": n_fallback["pallas"] == 0,
-        "replay_10x": replay_speedup["batched"] >= 10.0,
-        "pallas_solve_runs": solve_ips["pallas"] > 0.0,
-    }
-    for k, v in claims.items():
-        print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'}")
-    return claims
 
 
 if __name__ == "__main__":

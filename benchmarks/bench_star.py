@@ -1,0 +1,67 @@
+"""Star-platform throughput, three ways: serial NumPy loop vs the vmapped
+batched engine vs the fused-Pallas-kernel backend — the first non-chain
+workload class through the whole stack.
+
+Two measurements, mirroring bench_engine_throughput on the star topology:
+
+  * solve throughput — one-port-master LPs over a population of small star
+    instances, with the result-return phase active on half of them so both
+    bucket row patterns (with/without the return variable block) are
+    exercised in the same bulk call;
+  * replay throughput — the ASAP star recurrence (serialized master port +
+    return chain) on a campaign-scale sweep population, every instance
+    with returns.
+
+The whole methodology — timing, report, CSV schema, claims — lives once,
+in benchmarks/common.py::three_way_bench, shared with the chain bench;
+this module only supplies the star populations.  The acceptance bar is the
+same shape: at full scale the batched solve path must clear >= 10x the
+serial loop with zero fallbacks (a fallback would mean the star LP or its
+replay is mis-certified), and the chain numbers recorded by
+bench_engine_throughput must be unaffected — the star families are new
+rows in new buckets, never new work on chain paths.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.instance import random_instance
+
+from .common import three_way_bench
+
+N_INSTANCES = 1024
+M, N_LOADS, Q = 3, 2, 1  # small instances: the serial loop must finish
+N_REPLAY = 512
+M_R, N_LOADS_R, Q_R = 10, 5, 5  # §6 campaign scale for the replay path
+RETURN_RATIO = 0.5
+
+
+def _population(n: int, rng) -> list:
+    # half the population with the result-return phase: two bucket families
+    return [
+        random_instance(rng, m=M, n_loads=N_LOADS, q=Q, topology="star",
+                        return_ratio=RETURN_RATIO if k % 2 else 0.0)
+        for k in range(n)
+    ]
+
+
+def main(quick: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    replay_insts = [
+        random_instance(rng, m=M_R, n_loads=N_LOADS_R, q=Q_R, topology="star",
+                        return_ratio=RETURN_RATIO)
+        for _ in range(128 if quick else N_REPLAY)
+    ]
+    return three_way_bench(
+        "bench_star (star topology: serial NumPy vs batched vs pallas)",
+        solve_insts=_population(128 if quick else N_INSTANCES, rng),
+        replay_insts=replay_insts,
+        csv_name="star_throughput.csv",
+        quick=quick,
+        solve_note="star (half-with-returns) ",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,11 @@
 2. Solve it optimally with the Fig. 6 linear program (Q=2 installments) —
    through the solver-backend registry, with any registered backend.
 3. Compare against the Wong-Veeravalli-Barlas heuristics it supersedes.
-4. Use the same planner to schedule training batches for a real (smoke-size)
+4. Solve a STAR instance (one-port master + heterogeneous workers) with a
+   result-return phase through the exact same registry — the constraint
+   families are emitted once, topology-dispatched, so every backend
+   inherits every scenario (DESIGN.md §6).
+5. Use the same planner to schedule training batches for a real (smoke-size)
    model on a heterogeneous 3-stage chain, let `plan_auto_T` pick the
    installment count under a fixed per-installment cost (the practical
    Theorem-1 chooser), and run one training step per plan cell on CPU.
@@ -51,6 +55,24 @@ print("gamma (fraction of each load per processor per installment):")
 print(np.array_str(lp.schedule.gamma, precision=4, suppress_small=True))
 
 # ------------------------------------------------------------------------- 4
+print("\n=== the same registry on a star platform with result return ===")
+from repro.core import Instance, Loads, Star, star_single_load_makespan
+
+# a one-port master + 3 heterogeneous workers on a uniform-speed bus;
+# return_ratio=0.25 makes every computed fraction ship a quarter of its
+# input volume back to the master before the load counts as done
+star = Star(w=[0.8, 1.2, 0.6, 1.5], z=[0.3, 0.3, 0.3])
+star_inst = Instance(star, Loads(v_comm=[1.0], v_comp=[1.0]), q=1)
+star_lp = get_backend("batched").solve(SolveRequest(instance=star_inst))
+cf = star_single_load_makespan(star.w, star.z, 1.0, 1.0)
+print(f"star (bus) single load: LP makespan = {star_lp.makespan:.6f}, "
+      f"closed form = {cf:.6f} (equal on uniform links)")
+ret_inst = Instance(star, Loads(v_comm=[1.0], v_comp=[1.0], return_ratio=0.25), q=1)
+ret_lp = get_backend("batched").solve(SolveRequest(instance=ret_inst))
+print(f"with result return (ratio 0.25): makespan = {ret_lp.makespan:.6f} "
+      f"(last return arrives at {float(ret_lp.schedule.ret_end.max()):.6f})")
+
+# ------------------------------------------------------------------------- 5
 print("\n=== the same LP scheduling real training batches on a chain ===")
 cfg = smoke_variant(get_arch("llama3.2-3b"))
 policy = ShardingPolicy(attn_chunk=16)

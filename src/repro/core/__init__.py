@@ -13,6 +13,9 @@ from .closed_form import (
     multi_inst_makespan,
     multi_inst_q2,
     schedule_section_3_2,
+    star_bus_instance,
+    star_single_load_fractions,
+    star_single_load_makespan,
 )
 from .heuristics import (
     ALL_HEURISTICS,
@@ -36,7 +39,7 @@ from .backends import (
     get_backend,
     register_backend,
 )
-from .instance import Chain, Instance, Loads, random_instance
+from .instance import Chain, Instance, Loads, Star, Topology, random_instance
 from .lp import ScheduleLP, build_lp, extract_schedule
 from .planner import AutoTResult, BatchSpec, DLTPlan, LinkSpec, Planner, StageSpec
 from .schedule import Schedule, check_feasible
@@ -47,6 +50,8 @@ from .theory import QStarResult, optimal_installments, q_monotonicity
 
 __all__ = [
     "Chain",
+    "Star",
+    "Topology",
     "Loads",
     "Instance",
     "random_instance",
@@ -97,4 +102,7 @@ __all__ = [
     "multi_inst_q2",
     "multi_inst_makespan",
     "hand_schedule_lambda_3_4",
+    "star_single_load_fractions",
+    "star_single_load_makespan",
+    "star_bus_instance",
 ]

@@ -1,7 +1,15 @@
-"""Closed forms of the motivating example (paper §3).
+"""Closed forms of the motivating example (paper §3) and the single-load
+star platform (the oracle for the topology-general LP).
 
-Platform: m = 2 identical processors, w_1 = w_2 = lambda, z_1 = 1;
-loads: N = 2 identical, V_comm = V_comp = 1.
+Motivating example platform: m = 2 identical processors, w_1 = w_2 = lambda,
+z_1 = 1; loads: N = 2 identical, V_comm = V_comp = 1.
+
+Star closed form: the classical bus-network single-round result (Bharadwaj–
+Ghose–Mani–Robertazzi): all processors participate and finish
+simultaneously.  Under the one-port master with a FIXED activation order it
+is the LP optimum exactly when the links are uniform (a bus); with
+heterogeneous links the LP may beat it by skipping a slow-linked worker, so
+in general it is only an upper bound — both regimes are golden-tested.
 """
 
 from __future__ import annotations
@@ -10,7 +18,7 @@ import math
 
 import numpy as np
 
-from .instance import Chain, Instance, Loads
+from .instance import Chain, Instance, Loads, Star
 
 __all__ = [
     "LAMBDA_SINGLE_INSTALLMENT",
@@ -23,6 +31,9 @@ __all__ = [
     "multi_inst_q2",
     "multi_inst_makespan",
     "hand_schedule_lambda_3_4",
+    "star_single_load_fractions",
+    "star_single_load_makespan",
+    "star_bus_instance",
 ]
 
 #: threshold above which [19] stays single-installment: (sqrt(3)+1)/2 ~= 1.366
@@ -81,6 +92,63 @@ def multi_inst_makespan(lam: float) -> float:
     (1 - gamma_2^1(1))·lam + lam/2 (paper §3.4, case 3)."""
     g2 = lam / (2 * lam + 1)
     return (1 - g2) * lam + lam / 2
+
+
+def star_single_load_fractions(w, z, v_comm: float, v_comp: float) -> np.ndarray:
+    """Equal-finish fractions [m] for ONE load on a star, all participating.
+
+    The master P_0 computes its fraction locally; the one-port master sends
+    to workers 1..m-1 in index order, and every processor finishes at the
+    common time T.  With C_i the end of worker i's receive,
+
+        alpha_i = (T - C_{i-1}) / (w_i V_comp + z_{i-1} V_comm),
+        C_i = C_{i-1} + z_{i-1} V_comm alpha_i,
+
+    which telescopes to the product form below; sum alpha = 1 fixes T.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    z = np.asarray(z, dtype=np.float64)
+    m = w.shape[0]
+    T = star_single_load_makespan(w, z, v_comm, v_comp)
+    alpha = np.zeros(m)
+    alpha[0] = T / (w[0] * v_comp)
+    remaining = T  # T - C_{i-1}
+    for i in range(1, m):
+        d = w[i] * v_comp + z[i - 1] * v_comm
+        alpha[i] = remaining / d
+        remaining *= w[i] * v_comp / d
+    return alpha
+
+
+def star_single_load_makespan(w, z, v_comm: float, v_comp: float) -> float:
+    """Closed-form single-load star makespan (all-participate, equal finish):
+
+        1/T = 1/(w_0 V_comp)
+              + sum_{i>=1} [prod_{j<i} w_j V_comp / (w_j V_comp + z_{j-1} V_comm)]
+                            / (w_i V_comp + z_{i-1} V_comm).
+
+    Equals the schedule-LP optimum on bus platforms (uniform ``z``, no
+    latency/tau/release/returns); an upper bound otherwise (the LP may skip
+    a slow-linked worker under the fixed activation order).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    z = np.asarray(z, dtype=np.float64)
+    m = w.shape[0]
+    inv = 1.0 / (w[0] * v_comp)
+    prod = 1.0
+    for i in range(1, m):
+        d = w[i] * v_comp + z[i - 1] * v_comm
+        inv += prod / d
+        prod *= w[i] * v_comp / d
+    return 1.0 / inv
+
+
+def star_bus_instance(w, z: float, v_comm: float = 1.0, v_comp: float = 1.0,
+                      q: int = 1) -> Instance:
+    """A bus platform (star with uniform link speed ``z``), one load."""
+    w = np.asarray(w, dtype=np.float64)
+    star = Star(w=w, z=np.full(max(w.shape[0] - 1, 0), float(z)))
+    return Instance(star, Loads(v_comm=[v_comm], v_comp=[v_comp]), q=q)
 
 
 def hand_schedule_lambda_3_4() -> tuple[Instance, np.ndarray, float]:

@@ -62,6 +62,21 @@ __all__ = [
 _TOL = 1e-12
 
 
+def _require_chain(inst: Instance, name: str) -> None:
+    """The [18]/[19] strategies are defined on the paper's chain platform;
+    star instances are solved through the topology-general LP instead."""
+    if inst.topology != "chain":
+        raise ValueError(
+            f"{name} is a chain heuristic; got a {inst.topology!r} instance "
+            "(use the schedule LP — repro.core.solver.solve — for stars)"
+        )
+    if inst.has_returns:
+        raise ValueError(
+            f"{name} predates the result-return phase; solve return-phase "
+            "instances through the schedule LP instead"
+        )
+
+
 @dataclasses.dataclass
 class HeuristicResult:
     name: str
@@ -227,6 +242,7 @@ def _max_chunk(
 
 def simple(inst: Instance) -> HeuristicResult:
     """SIMPLE: single installment, fractions proportional to processor speeds."""
+    _require_chain(inst, "SIMPLE")
     m = inst.m
     cols = []
     for n in range(inst.N):
@@ -238,6 +254,7 @@ def simple(inst: Instance) -> HeuristicResult:
 def single_load(inst: Instance) -> HeuristicResult:
     """SINGLELOAD [18]: per-load equal-finish with the time origin reset to the
     availability of the first link; downstream link availability ignored."""
+    _require_chain(inst, "SINGLELOAD")
     m = inst.m
     st = _State(inst)
     cols = []
@@ -254,6 +271,7 @@ def single_load(inst: Instance) -> HeuristicResult:
 
 def single_inst(inst: Instance) -> HeuristicResult:
     """SINGLEINST: load-by-load equal-completion with full availability info."""
+    _require_chain(inst, "SINGLEINST")
     st = _State(inst)
     cols = []
     for n in range(inst.N):
@@ -267,6 +285,7 @@ def single_inst(inst: Instance) -> HeuristicResult:
 
 def heuristic_b(inst: Instance) -> HeuristicResult:
     """HEURISTIC B (reconstruction): SINGLEINST over the best processor prefix."""
+    _require_chain(inst, "HEURISTIC_B")
     m = inst.m
     st = _State(inst)
     cols = []
@@ -326,6 +345,7 @@ def _dump_remainder(inst: Instance, n: int, st: "_State", remaining: float) -> n
 
 def multi_inst(inst: Instance, cap: int | None = None, max_uncapped: int = 10_000) -> HeuristicResult:
     """MULTIINST (optionally capped at ``cap`` installments per load)."""
+    _require_chain(inst, "MULTIINST")
     m = inst.m
     name = f"MULTIINST_{cap}" if cap else "MULTIINST"
     if m == 1:
@@ -432,12 +452,20 @@ def adversary_sweep(
     one NumPy replay per instance.
 
     Returns ``{strategy: np.ndarray of makespans}`` (inf where the strategy
-    failed), aligned with ``instances``.
+    failed — including star/return-phase instances, which every chain
+    heuristic rejects), aligned with ``instances``.
     """
     strategies = dict(ALL_HEURISTICS) if strategies is None else strategies
+
+    def run(name, fn, inst):
+        try:
+            return fn(inst)
+        except ValueError as e:  # chain-only guard: record, don't abort the sweep
+            return HeuristicResult(name, None, None, None, True, str(e))
+
     out = {}
     for name, fn in strategies.items():
-        results = [fn(inst) for inst in instances]
+        results = [run(name, fn, inst) for inst in instances]
         mks = np.full(len(instances), np.inf)
         ok = [i for i, r in enumerate(results) if not r.failed]
         if ok and simulator == "batched":

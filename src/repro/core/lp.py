@@ -1,10 +1,12 @@
 """Serial schedule-LP builder — the sparse consumer of the shared IR.
 
-The constraint families themselves (Fig. 6 (1)-(10), the (2b)/(3b) own-port
-rows, and the §5 extensions) are emitted exactly once, in
-:mod:`repro.lpir.ir`; this module lowers that row stream to the sparse
-triplet form the serial simplex / HiGHS path consumes and keeps the
-historical :class:`ScheduleLP` container + :func:`extract_schedule` API.
+The constraint families themselves (Fig. 6 (1)-(10) for the chain, the
+star's one-port master families, the (2b)/(3b) own-port rows, the
+result-return phase, and the §5 extensions) are emitted exactly once, in
+:mod:`repro.lpir.ir`, dispatched on the instance's topology; this module
+lowers that row stream to the sparse triplet form the serial simplex /
+HiGHS path consumes and keeps the historical :class:`ScheduleLP` container
++ :func:`extract_schedule` API.
 
 Variables (end-times substituted out via constraints (5)/(7), which halves the
 variable count without changing the feasible set):
@@ -32,7 +34,7 @@ import numpy as np
 from repro.lpir import InstanceView, elide_dead_rows, emit_schedule_ir, lower_sparse
 
 from .instance import Instance
-from .schedule import Schedule, comm_durations, comp_durations
+from .schedule import Schedule, comm_durations, comp_durations, ret_durations
 
 __all__ = ["ScheduleLP", "build_lp", "extract_schedule"]
 
@@ -58,6 +60,7 @@ class ScheduleLP:
     off_mk: int
     off_cn: int  # -1 if absent
     T: int
+    off_ret: int = -1  # -1 if the result-return phase is absent
 
     def comm(self, i: int, t: int) -> int:
         return self.off_comm + i * self.T + t
@@ -135,6 +138,7 @@ def build_lp(
         off_mk=lay.off_mk,
         off_cn=lay.off_cn,
         T=lay.T,
+        off_ret=lay.off_ret,
     )
 
 
@@ -147,6 +151,10 @@ def extract_schedule(lp: ScheduleLP, x: np.ndarray) -> Schedule:
     ps = x[lp.off_comp : lp.off_comp + m * T].reshape(m, T)
     dcomm = comm_durations(inst, gamma)
     dcomp = comp_durations(inst, gamma)
+    rs = re = None
+    if lp.off_ret >= 0:
+        rs = x[lp.off_ret : lp.off_ret + max(m - 1, 0) * T].reshape(max(m - 1, 0), T)
+        re = rs + ret_durations(inst, gamma)
     return Schedule(
         instance=inst,
         gamma=gamma,
@@ -155,4 +163,6 @@ def extract_schedule(lp: ScheduleLP, x: np.ndarray) -> Schedule:
         comp_start=ps,
         comp_end=ps + dcomp,
         makespan=float(x[lp.off_mk]),
+        ret_start=rs,
+        ret_end=re,
     )

@@ -24,7 +24,7 @@ import dataclasses
 import numpy as np
 
 from .backends import SolveRequest, get_backend
-from .instance import Chain, Instance, Loads
+from .instance import Chain, Instance, Loads, Star
 from .solver import LPResult
 
 __all__ = [
@@ -54,12 +54,19 @@ class LinkSpec:
 
 @dataclasses.dataclass
 class BatchSpec:
-    """One divisible load: a global batch of independent samples."""
+    """One divisible load: a global batch of independent samples.
+
+    ``return_bytes_per_sample`` > 0 activates the result-return phase for
+    this load: after a stage computes its samples, that many bytes per
+    sample (gradients, logits, labels) must flow back to the source stage
+    before the batch counts as finished.
+    """
 
     num_samples: int
     bytes_per_sample: float
     flops_per_sample: float
     release_at: float = 0.0
+    return_bytes_per_sample: float = 0.0
 
 
 @dataclasses.dataclass
@@ -120,14 +127,25 @@ def _largest_remainder(frac: np.ndarray, total: int) -> np.ndarray:
 
 
 class Planner:
-    """Solve + maintain DLT schedules for a chain of device groups."""
+    """Solve + maintain DLT schedules for a chain or star of device groups.
 
-    def __init__(self, stages: list, links: list, ewma: float = 0.5, cache=None):
+    ``topology="chain"`` (default) is the paper's linear pipeline: stage i
+    forwards data to stage i+1.  ``topology="star"`` makes stage 0 the
+    one-port master (the data-holding pod) with every other stage attached
+    by its own link — ``links[i]`` then connects the master to stage i+1.
+    Both need exactly ``len(stages) - 1`` links.
+    """
+
+    def __init__(self, stages: list, links: list, ewma: float = 0.5, cache=None,
+                 topology: str = "chain"):
         if len(links) != max(len(stages) - 1, 0):
             raise ValueError("need exactly len(stages)-1 links")
+        if topology not in ("chain", "star"):
+            raise ValueError(f"unknown topology {topology!r}")
         self.stages = list(stages)
         self.links = list(links)
         self.ewma = ewma
+        self.topology = topology
         # engine solution cache (repro.engine.cache.SolutionCache); shared
         # across replans so identical platform states replay instead of solve
         self._cache = cache
@@ -139,13 +157,27 @@ class Planner:
         z = np.array([1.0 / l.bytes_per_sec for l in self.links])
         lat = np.array([l.startup_sec for l in self.links])
         tau = np.array([s.available_at for s in self.stages])
-        chain = Chain(w=w, z=z, tau=tau, latency=lat)
+        platform_cls = Star if self.topology == "star" else Chain
+        platform = platform_cls(w=w, z=z, tau=tau, latency=lat)
+        for b in batches:
+            if b.return_bytes_per_sample > 0 and b.bytes_per_sample <= 0:
+                raise ValueError(
+                    "BatchSpec with return_bytes_per_sample > 0 needs "
+                    "bytes_per_sample > 0: the return phase is modeled as a "
+                    "ratio of the forward volume, so a zero-byte forward "
+                    "load cannot express its return traffic"
+                )
         loads = Loads(
             v_comm=[b.num_samples * b.bytes_per_sample for b in batches],
             v_comp=[b.num_samples * b.flops_per_sample for b in batches],
             release=[b.release_at for b in batches],
+            return_ratio=[
+                (b.return_bytes_per_sample / b.bytes_per_sample)
+                if b.bytes_per_sample > 0 else 0.0
+                for b in batches
+            ],
         )
-        return Instance(chain, loads, q=q)
+        return Instance(platform, loads, q=q)
 
     # ---------------- planning ----------------
 
@@ -274,10 +306,17 @@ class Planner:
 
         ``restore_delay`` becomes the surviving stages' availability date tau_i
         (the time to restore the last checkpoint onto the new chain).
+
+        On a star, dropping a worker simply removes its private link (the
+        master — stage 0 — cannot be dropped: it holds the data).
         """
         stages = [s for k, s in enumerate(self.stages) if k != dead]
         links = list(self.links)
-        if dead == 0:
+        if self.topology == "star":
+            if dead == 0:
+                raise ValueError("cannot drop the star master (it holds the data)")
+            links = links[: dead - 1] + links[dead:]
+        elif dead == 0:
             links = links[1:]
         elif dead == len(self.stages) - 1:
             links = links[:-1]
@@ -291,7 +330,8 @@ class Planner:
         stages = [
             dataclasses.replace(s, available_at=max(s.available_at, restore_delay)) for s in stages
         ]
-        p2 = Planner(stages, links, ewma=self.ewma, cache=self._cache)
+        p2 = Planner(stages, links, ewma=self.ewma, cache=self._cache,
+                     topology=self.topology)
         return p2, p2.plan(batches, q=q, backend=backend)
 
     def observe_step_time(self, stage: int, achieved_flops_per_sec: float) -> bool:

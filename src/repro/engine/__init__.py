@@ -3,10 +3,11 @@
 Evaluates and solves whole populations of paper instances in parallel:
 
 * :mod:`repro.engine.arena` — packs heterogeneous instances into fixed-shape
-  padded batches bucketed by ``(m, T, q)``;
-* :mod:`repro.engine.batched_sim` — the ASAP constraint-(1)-(10) recurrence
-  as a ``lax.scan``, jitted and ``vmap``-ed (bit-matches the NumPy
-  simulator);
+  padded batches bucketed by ``(topology, has_returns, m, T, q)``;
+* :mod:`repro.engine.batched_sim` — the topology-dispatched ASAP recurrence
+  (chain store-and-forward or star one-port master, plus the optional
+  result-return phase) as a ``lax.scan``, jitted and ``vmap``-ed
+  (bit-matches the NumPy simulator);
 * :mod:`repro.engine.batched_simplex` — a fixed-shape two-phase dense
   simplex under ``vmap`` for thousands of small schedule LPs at once;
 * :mod:`repro.engine.cache` / :mod:`repro.engine.service` — quantized

@@ -3,10 +3,13 @@ padded arrays so JAX can ``vmap``/``jit`` over whole populations at once.
 
 Two levels of grouping (DESIGN.md ## Engine):
 
-* **exact buckets** — instances sharing the structural key ``(m, T, q)`` have
-  identical recurrence *and* LP shapes; they batch with no padding at all.
-  This is what the batched simplex path requires (the completeness rows
-  depend on the cell -> load map, which the ``q`` tuple fixes).
+* **exact buckets** — instances sharing the structural key
+  ``(topology, has_returns, m, T, q)`` have identical recurrence *and* LP
+  shapes; they batch with no padding at all.  This is what the batched
+  simplex path requires (the completeness rows depend on the cell -> load
+  map, which the ``q`` tuple fixes; the precedence-row pattern depends on
+  the topology and on whether the result-return phase is active, which the
+  two leading key components fix).
 * **shape ladder** — for the simulator-only paths (adversary sweeps,
   Monte-Carlo what-ifs) the arena can additionally pad every bucket up to
   ladder dimensions ``(m_pad, T_pad)`` (next ladder rung >= the real size) so
@@ -15,10 +18,11 @@ Two levels of grouping (DESIGN.md ## Engine):
     - fake processors get ``w_cell = 0`` rows (their compute durations are
       identically zero) and ``tau = 0``;
     - fake links get ``z = latency = 0`` (zero-duration messages);
-    - fake trailing cells get ``vcomm = vcomp = release = 0`` and are marked
-      invalid in ``cell_valid`` — crucially their *latency contribution is
-      masked to zero* so the ASAP recurrence over padded cells can never push
-      any time past the real makespan (every padded comm/comp end is a max of
+    - fake trailing cells get ``vcomm = vcomp = release = return_ratio = 0``
+      and are marked invalid in ``cell_valid`` — crucially their *latency
+      contribution is masked to zero* (forward and return phases alike) so
+      the ASAP recurrence over padded cells can never push any time past the
+      real makespan (every padded comm/comp/return end is a max of
       already-existing times plus zero).
 
 All packed arrays are float64 — the engine bit-matches the NumPy simulator.
@@ -54,7 +58,7 @@ class PackedBucket:
     the batch).  ``indices`` maps batch rows back to the caller's order.
     """
 
-    key: tuple  # (m_real, T_real, q)
+    key: tuple  # (topology, has_returns, m_real, T_real, q)
     instances: list
     indices: list
     m: int
@@ -62,6 +66,8 @@ class PackedBucket:
     m_real: int
     T_real: int
     q: tuple
+    topology: str  # "chain" | "star" — shared by the whole bucket
+    has_returns: bool  # result-return phase active (shared by the bucket)
     w_cell: np.ndarray  # [B, m, T]   w_i(n_t)  (0 on padding)
     z: np.ndarray  # [B, m-1]    seconds/unit over link i (0 on padding)
     latency: np.ndarray  # [B, m-1]    K_i (0 on padding)
@@ -69,6 +75,7 @@ class PackedBucket:
     vcomm_cell: np.ndarray  # [B, T]  V_comm(n_t) (0 on padding)
     vcomp_cell: np.ndarray  # [B, T]  V_comp(n_t) (0 on padding)
     rel_cell: np.ndarray  # [B, T]   release(n_t) (0 on padding)
+    ret_cell: np.ndarray  # [B, T]   return_ratio(n_t) (0 on padding)
     cell_valid: np.ndarray  # [T] bool — trailing padding cells are False
     load_of_cell: np.ndarray  # [T] int — cell -> load (-1 on padding)
     n_loads: int
@@ -114,18 +121,20 @@ def _pack_group(members: list, m_pad: int, T_pad: int, locs: np.ndarray) -> dict
         vcomm_cell=np.zeros((B, T_pad)),
         vcomp_cell=np.zeros((B, T_pad)),
         rel_cell=np.zeros((B, T_pad)),
+        ret_cell=np.zeros((B, T_pad)),
     )
     for b, inst in enumerate(members):
         if inst.w_per_load is not None:
             out["w_cell"][b, :m, :T] = inst.w_per_load[:, locs]
         else:
-            out["w_cell"][b, :m, :T] = inst.chain.w[:, None]
-        out["z"][b, : m - 1] = inst.chain.z
-        out["latency"][b, : m - 1] = inst.chain.latency
-        out["tau"][b, :m] = inst.chain.tau
+            out["w_cell"][b, :m, :T] = inst.platform.w[:, None]
+        out["z"][b, : m - 1] = inst.platform.z
+        out["latency"][b, : m - 1] = inst.platform.latency
+        out["tau"][b, :m] = inst.platform.tau
         out["vcomm_cell"][b, :T] = inst.loads.v_comm[locs]
         out["vcomp_cell"][b, :T] = inst.loads.v_comp[locs]
         out["rel_cell"][b, :T] = inst.loads.release[locs]
+        out["ret_cell"][b, :T] = inst.loads.return_ratio[locs]
     return out
 
 
@@ -138,12 +147,13 @@ def pack_instances(instances: list, pad_shapes: bool = False) -> list:
     """
     groups: dict[tuple, list] = {}
     for idx, inst in enumerate(instances):
-        key = (inst.m, inst.total_installments, tuple(inst.q))
+        key = (inst.topology, inst.has_returns, inst.m,
+               inst.total_installments, tuple(inst.q))
         groups.setdefault(key, []).append(idx)
 
     buckets = []
     for key in sorted(groups):
-        m_real, T_real, q = key
+        topology, has_returns, m_real, T_real, q = key
         idxs = groups[key]
         m_pad = _rung(m_real) if pad_shapes else m_real
         T_pad = _rung(T_real) if pad_shapes else T_real
@@ -164,6 +174,8 @@ def pack_instances(instances: list, pad_shapes: bool = False) -> list:
                 m_real=m_real,
                 T_real=T_real,
                 q=q,
+                topology=topology,
+                has_returns=has_returns,
                 cell_valid=cell_valid,
                 load_of_cell=load_of_cell,
                 n_loads=members[0].N,

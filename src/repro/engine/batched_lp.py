@@ -1,12 +1,14 @@
-"""Vectorized Fig.-6 LP builder for a packed bucket — the dense IR consumer.
+"""Vectorized schedule-LP builder for a packed bucket — the dense IR consumer.
 
 The constraint families live in :mod:`repro.lpir.ir` (emitted once for every
-builder in the tree); this module feeds the emitter a :class:`BucketView` —
-whose accessors return ``[B]`` coefficient vectors instead of scalars — and
-lowers the resulting row stream to the dense ``[B, R, n_vars]`` batches the
-vmapped simplex consumes.  Within an exact ``(m, T, q)`` bucket every
-instance has the *same* constraint pattern, so each IR term becomes one
-vectorized assignment for the whole batch.
+builder in the tree, topology-dispatched: the chain's Fig. 6, the star's
+one-port master, the result-return phase); this module feeds the emitter a
+:class:`BucketView` — whose accessors return ``[B]`` coefficient vectors
+instead of scalars — and lowers the resulting row stream to the dense
+``[B, R, n_vars]`` batches the vmapped simplex consumes.  Within an exact
+``(topology, returns, m, T, q)`` bucket every instance has the *same*
+constraint pattern, so each IR term becomes one vectorized assignment for
+the whole batch.
 
 Differences from the serial lowering (optimum unaffected, shapes static):
 

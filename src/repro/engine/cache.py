@@ -31,17 +31,25 @@ def _quantize(a: np.ndarray, quantum: float) -> np.ndarray:
 
 
 def instance_key(inst: Instance, objective: str = "makespan", quantum: float = 1e-9) -> str:
-    """Stable content hash of a quantized instance (+ objective)."""
+    """Stable content hash of a quantized instance (+ objective).
+
+    The topology tag is part of the key — a chain and a star with identical
+    parameter arrays are different scheduling problems — and so are the
+    per-load return ratios (they change the LP's variable blocks).
+    """
     h = hashlib.sha256()
-    h.update(f"{objective}|m={inst.m}|N={inst.N}|q={inst.q}".encode())
+    h.update(
+        f"{objective}|topo={inst.topology}|m={inst.m}|N={inst.N}|q={inst.q}".encode()
+    )
     for arr in (
-        inst.chain.w,
-        inst.chain.z,
-        inst.chain.tau,
-        inst.chain.latency,
+        inst.platform.w,
+        inst.platform.z,
+        inst.platform.tau,
+        inst.platform.latency,
         inst.loads.v_comm,
         inst.loads.v_comp,
         inst.loads.release,
+        inst.loads.return_ratio,
         inst.w_per_load if inst.w_per_load is not None else np.zeros(0),
     ):
         h.update(_quantize(arr, quantum).tobytes())

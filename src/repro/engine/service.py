@@ -112,7 +112,8 @@ def solve_bulk(
         lp_mks = lp.makespan_of(res.x)
 
         # replay every solved gamma through the batched ASAP simulator
-        cs, ce, ps, pe, mk = simulate_bucket(
+        # (rs/re are None unless the bucket activates the return phase)
+        cs, ce, ps, pe, rs, re, mk = simulate_bucket(
             bucket, bucket.gamma_padded(list(gammas)), use_pallas=use_pallas)
 
         for b in range(B):
@@ -145,6 +146,8 @@ def solve_bulk(
                 comp_start=ps[b],
                 comp_end=pe[b],
                 makespan=float(mk[b]),
+                ret_start=rs[b] if rs is not None else None,
+                ret_end=re[b] if re is not None else None,
             )
             results[gi] = _result_from_gamma(
                 inst, gammas[b], lp_mks[b], label, sched=sched

@@ -1,27 +1,40 @@
-"""Pallas ASAP-replay kernel: the constraint-(1)-(10) recurrence of
+"""Pallas ASAP-replay kernel: the topology-dispatched ASAP recurrence of
 ``repro.core.simulator`` for one packed bucket, one kernel launch.
 
 Each grid step replays one batch element with every per-instance array
 ([m, T] fractions and durations, [m-1] link parameters) block-resident, so
-the whole recurrence — duration build, the store-and-forward link chain, the
-computation fronts — runs without a single intermediate HBM round trip.  The
-vmapped ``lax.scan`` reference (``repro.engine.batched_sim``) materializes
-the per-cell carries between XLA ops instead; on the sweep workloads the
-replay is bandwidth-bound, which is exactly what the fusion buys back.
+the whole recurrence — duration build, the send chain, the computation
+fronts, and (when active) the result-return chain — runs without a single
+intermediate HBM round trip.  The vmapped ``lax.scan`` reference
+(``repro.engine.batched_sim``) materializes the per-cell carries between XLA
+ops instead; on the sweep workloads the replay is bandwidth-bound, which is
+exactly what the fusion buys back.
 
 The recurrence per cell ``t`` (identical to the NumPy/vmapped references):
 
+  chain forward:
     cs[i,t] = max(rel_t if i==0, ce[i-1,t], ce[i,t-1], ce[i+1,t-1])
+  star forward (one-port master; the carry crosses cell boundaries):
+    cs[i,t] = max(rel_t, previous send end)
+  both:
     ce[i,t] = cs[i,t] + dcomm[i,t]
     ps[i,t] = max(tau_i | pe[i,t-1],  rel_t if i==0 else ce[i-1,t])
     pe[i,t] = ps[i,t] + dcomp[i,t]
+  chain return (backward store-and-forward + per-link serialization):
+    rs[i,t] = max(pe[i+1,t], re[i+1,t], re[i,t-1])
+  star return (serialized master receive port, carry crosses cells):
+    rs[i,t] = max(pe[i+1,t], previous return end)
+  both: re[i,t] = rs[i,t] + dret[i,t]
 
-Padded cells carry zero durations with their latency term masked by
-``valid`` (see arena.py), so they can never push any time past the real
-makespan; the cell loop therefore runs the full padded ``T`` unconditionally.
+Topology and the return phase are *static* kernel parameters — each
+(topology, returns) combination is its own compiled program, matching the
+arena's bucket key.  Padded cells carry zero durations with their latency
+term masked by ``valid`` in-kernel — in the forward AND return phases — so
+they can never push any time past the real makespan; the cell loop
+therefore runs the full padded ``T`` unconditionally.
 
-Requires ``m >= 2`` (the ``m == 1`` chain has no links — callers fall back
-to the vmapped path, where the empty link scan is free).  The pure-jnp
+Requires ``m >= 2`` (the ``m == 1`` platform has no links — callers fall
+back to the vmapped path, where the empty link scan is free).  The pure-jnp
 oracle is :func:`repro.kernels.ref.asap_replay_ref`; ``interpret=True`` runs
 this body on CPU (``ops._interp``).
 """
@@ -32,86 +45,195 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["asap_replay_kernel", "asap_replay_call"]
+__all__ = ["make_asap_replay_kernel", "asap_replay_call"]
 
 _NEG = -jnp.inf  # identity for max over absent lower bounds
 
 
-def asap_replay_kernel(
-    w_ref, z_ref, lat_ref, tau_ref, vcomm_ref, vcomp_ref, rel_ref, valid_ref,
-    gamma_ref, cs_ref, ce_ref, ps_ref, pe_ref, mk_ref,
-):
-    w = w_ref[0]  # [m, T]
-    z = z_ref[0]  # [m-1]
-    lat = lat_ref[0]  # [m-1]
-    tau = tau_ref[0]  # [m]
-    vcomm = vcomm_ref[0]  # [T]
-    vcomp = vcomp_ref[0]  # [T]
-    rel = rel_ref[0]  # [T]
-    valid = valid_ref[...]  # [T] — shared across the batch
-    gamma = gamma_ref[0]  # [m, T]
-    m, T = gamma.shape
+def make_asap_replay_kernel(topology: str, with_ret: bool):
+    """Build the replay kernel body for one (topology, returns) combination."""
+    star = topology == "star"
 
-    # durations (same math as schedule.comm_durations / comp_durations):
-    # suffix[i] = sum_{k >= i} gamma[k] — the volume still to forward past i
-    suffix = jnp.cumsum(gamma[::-1], axis=0)[::-1]
-    dcomm = (z[:, None] * vcomm[None, :] * suffix[1:, :] + lat[:, None]) * valid[None, :]
-    dcomp = w * vcomp[None, :] * gamma
+    def kernel(*refs):
+        if with_ret:
+            (w_ref, z_ref, lat_ref, tau_ref, vcomm_ref, vcomp_ref, rel_ref,
+             ret_ref, valid_ref, gamma_ref,
+             cs_ref, ce_ref, ps_ref, pe_ref, rs_ref, re_ref, mk_ref) = refs
+        else:
+            (w_ref, z_ref, lat_ref, tau_ref, vcomm_ref, vcomp_ref, rel_ref,
+             valid_ref, gamma_ref,
+             cs_ref, ce_ref, ps_ref, pe_ref, mk_ref) = refs
+        w = w_ref[0]  # [m, T]
+        z = z_ref[0]  # [m-1]
+        lat = lat_ref[0]  # [m-1]
+        tau = tau_ref[0]  # [m]
+        vcomm = vcomm_ref[0]  # [T]
+        vcomp = vcomp_ref[0]  # [T]
+        rel = rel_ref[0]  # [T]
+        valid = valid_ref[...]  # [T] — shared across the batch
+        gamma = gamma_ref[0]  # [m, T]
+        m, T = gamma.shape
 
-    link_idx = jax.lax.broadcasted_iota(jnp.int32, (m - 1, 1), 0)[:, 0]
+        # durations (same math as schedule.comm/comp/ret_durations): the link
+        # volume is the suffix still to forward (chain) or the worker's own
+        # fraction (star); padded cells are masked — latency term included
+        if star:
+            vol = gamma[1:, :]
+        else:
+            vol = jnp.cumsum(gamma[::-1], axis=0)[::-1][1:, :]
+        dcomm = (z[:, None] * vcomm[None, :] * vol + lat[:, None]) * valid[None, :]
+        dcomp = w * vcomp[None, :] * gamma
+        if with_ret:
+            retr = ret_ref[0]  # [T]
+            dret = (z[:, None] * (retr * vcomm)[None, :] * vol
+                    + lat[:, None]) * valid[None, :]
 
-    def cell(t, carry):
-        prev_ce, prev_pe = carry  # [m-1], [m]
-        dcm_t = jax.lax.dynamic_slice_in_dim(dcomm, t, 1, axis=1)[:, 0]
-        dcp_t = jax.lax.dynamic_slice_in_dim(dcomp, t, 1, axis=1)[:, 0]
-        rel_t = jax.lax.dynamic_slice_in_dim(rel, t, 1)[0]
+        link_idx = jax.lax.broadcasted_iota(jnp.int32, (m - 1, 1), 0)[:, 0]
+        zeros = jnp.zeros(m - 1, gamma.dtype)
 
-        # lower bounds known before the intra-cell chain: (2b)/(3b) own-port
-        # + (2)/(3) receive-after-forward + the head's release date
-        ready = jnp.maximum(
-            prev_ce,
-            jnp.concatenate([prev_ce[1:], jnp.full((1,), _NEG, prev_ce.dtype)]),
-        )
-        ready = jnp.where(link_idx == 0, jnp.maximum(ready, rel_t), ready)
+        def cell(t, carry):
+            if star and with_ret:
+                last_send, prev_pe, last_ret, mk_ret = carry
+            elif star:
+                last_send, prev_pe = carry
+            elif with_ret:
+                prev_ce, prev_pe, prev_re, mk_ret = carry
+            else:
+                prev_ce, prev_pe = carry
+            dcm_t = jax.lax.dynamic_slice_in_dim(dcomm, t, 1, axis=1)[:, 0]
+            dcp_t = jax.lax.dynamic_slice_in_dim(dcomp, t, 1, axis=1)[:, 0]
+            rel_t = jax.lax.dynamic_slice_in_dim(rel, t, 1)[0]
+            if with_ret:
+                dr_t = jax.lax.dynamic_slice_in_dim(dret, t, 1, axis=1)[:, 0]
 
-        def link(i, lc):
-            up_ce, cs_v, ce_v = lc
-            ready_i = jax.lax.dynamic_slice_in_dim(ready, i, 1)[0]
-            dcm_i = jax.lax.dynamic_slice_in_dim(dcm_t, i, 1)[0]
-            lo = jnp.maximum(ready_i, jnp.where(i == 0, 0.0, up_ce))  # (1)
-            lo = jnp.maximum(lo, 0.0)
-            ce_i = lo + dcm_i
-            cs_v = jax.lax.dynamic_update_slice_in_dim(cs_v, lo[None], i, axis=0)
-            ce_v = jax.lax.dynamic_update_slice_in_dim(ce_v, ce_i[None], i, axis=0)
-            return ce_i, cs_v, ce_v
+            if star:
+                # (1*) one serialized send chain on the master's port
+                def link(i, lc):
+                    c, cs_v, ce_v = lc
+                    dcm_i = jax.lax.dynamic_slice_in_dim(dcm_t, i, 1)[0]
+                    lo = jnp.maximum(c, rel_t)
+                    lo = jnp.maximum(lo, 0.0)
+                    ce_i = lo + dcm_i
+                    cs_v = jax.lax.dynamic_update_slice_in_dim(cs_v, lo[None], i, axis=0)
+                    ce_v = jax.lax.dynamic_update_slice_in_dim(ce_v, ce_i[None], i, axis=0)
+                    return ce_i, cs_v, ce_v
 
-        zeros = jnp.zeros(m - 1, prev_ce.dtype)
-        _, cs_t, ce_t = jax.lax.fori_loop(
-            0, m - 1, link, (jnp.asarray(_NEG, prev_ce.dtype), zeros, zeros)
-        )
+                last_send, cs_t, ce_t = jax.lax.fori_loop(
+                    0, m - 1, link, (last_send, zeros, zeros)
+                )
+            else:
+                # lower bounds known before the intra-cell chain: (2b)/(3b)
+                # own-port + (2)/(3) receive-after-forward + head release
+                ready = jnp.maximum(
+                    prev_ce,
+                    jnp.concatenate([prev_ce[1:], jnp.full((1,), _NEG, prev_ce.dtype)]),
+                )
+                ready = jnp.where(link_idx == 0, jnp.maximum(ready, rel_t), ready)
 
-        # computations: (8)/(9)+(10) via prev_pe (initialized to tau), (6)
-        ps_t = jnp.maximum(prev_pe, jnp.concatenate([rel_t[None], ce_t]))
-        pe_t = ps_t + dcp_t
+                def link(i, lc):
+                    up_ce, cs_v, ce_v = lc
+                    ready_i = jax.lax.dynamic_slice_in_dim(ready, i, 1)[0]
+                    dcm_i = jax.lax.dynamic_slice_in_dim(dcm_t, i, 1)[0]
+                    lo = jnp.maximum(ready_i, jnp.where(i == 0, 0.0, up_ce))  # (1)
+                    lo = jnp.maximum(lo, 0.0)
+                    ce_i = lo + dcm_i
+                    cs_v = jax.lax.dynamic_update_slice_in_dim(cs_v, lo[None], i, axis=0)
+                    ce_v = jax.lax.dynamic_update_slice_in_dim(ce_v, ce_i[None], i, axis=0)
+                    return ce_i, cs_v, ce_v
 
-        cs_ref[0, :, pl.ds(t, 1)] = cs_t[:, None]
-        ce_ref[0, :, pl.ds(t, 1)] = ce_t[:, None]
-        ps_ref[0, :, pl.ds(t, 1)] = ps_t[:, None]
-        pe_ref[0, :, pl.ds(t, 1)] = pe_t[:, None]
-        return ce_t, pe_t
+                _, cs_t, ce_t = jax.lax.fori_loop(
+                    0, m - 1, link, (jnp.asarray(_NEG, prev_ce.dtype), zeros, zeros)
+                )
 
-    init = (jnp.zeros(m - 1, gamma.dtype), tau)
-    _, last_pe = jax.lax.fori_loop(0, T, cell, init)
-    mk_ref[0] = jnp.max(last_pe)
+            # computations: (8)/(9)+(10) via prev_pe (initialized to tau), (6)
+            ps_t = jnp.maximum(prev_pe, jnp.concatenate([rel_t[None], ce_t]))
+            pe_t = ps_t + dcp_t
+
+            cs_ref[0, :, pl.ds(t, 1)] = cs_t[:, None]
+            ce_ref[0, :, pl.ds(t, 1)] = ce_t[:, None]
+            ps_ref[0, :, pl.ds(t, 1)] = ps_t[:, None]
+            pe_ref[0, :, pl.ds(t, 1)] = pe_t[:, None]
+
+            if not with_ret:
+                if star:
+                    return last_send, pe_t
+                return ce_t, pe_t
+
+            # ---- result-return phase ----
+            if star:
+                # (R1*) serialized receive chain on the master's port
+                def ret_link(i, lc):
+                    c, rs_v, re_v = lc
+                    pe_i = jax.lax.dynamic_slice_in_dim(pe_t, i + 1, 1)[0]
+                    dr_i = jax.lax.dynamic_slice_in_dim(dr_t, i, 1)[0]
+                    lo = jnp.maximum(c, pe_i)  # (R6)
+                    lo = jnp.maximum(lo, 0.0)
+                    re_i = lo + dr_i
+                    rs_v = jax.lax.dynamic_update_slice_in_dim(rs_v, lo[None], i, axis=0)
+                    re_v = jax.lax.dynamic_update_slice_in_dim(re_v, re_i[None], i, axis=0)
+                    return re_i, rs_v, re_v
+
+                last_ret, rs_t, re_t = jax.lax.fori_loop(
+                    0, m - 1, ret_link, (last_ret, zeros, zeros)
+                )
+            else:
+                # (R1) backward store-and-forward + (R2b) per-link serial
+                def ret_link(j, lc):
+                    down_re, rs_v, re_v = lc
+                    i = m - 2 - j
+                    pe_down = jax.lax.dynamic_slice_in_dim(pe_t, i + 1, 1)[0]
+                    pre_i = jax.lax.dynamic_slice_in_dim(prev_re, i, 1)[0]
+                    dr_i = jax.lax.dynamic_slice_in_dim(dr_t, i, 1)[0]
+                    lo = jnp.maximum(pe_down, pre_i)  # (R6), (R2b)
+                    lo = jnp.maximum(lo, down_re)  # (R1)
+                    lo = jnp.maximum(lo, 0.0)
+                    re_i = lo + dr_i
+                    rs_v = jax.lax.dynamic_update_slice_in_dim(rs_v, lo[None], i, axis=0)
+                    re_v = jax.lax.dynamic_update_slice_in_dim(re_v, re_i[None], i, axis=0)
+                    return re_i, rs_v, re_v
+
+                _, rs_t, re_t = jax.lax.fori_loop(
+                    0, m - 1, ret_link,
+                    (jnp.asarray(_NEG, gamma.dtype), zeros, zeros)
+                )
+
+            rs_ref[0, :, pl.ds(t, 1)] = rs_t[:, None]
+            re_ref[0, :, pl.ds(t, 1)] = re_t[:, None]
+            mk_ret = jnp.maximum(mk_ret, jnp.max(re_t))
+            if star:
+                return last_send, pe_t, last_ret, mk_ret
+            return ce_t, pe_t, re_t, mk_ret
+
+        zero = jnp.asarray(0.0, gamma.dtype)
+        if star and with_ret:
+            init = (zero, tau, zero, zero)
+        elif star:
+            init = (zero, tau)
+        elif with_ret:
+            init = (zeros, tau, zeros, zero)
+        else:
+            init = (zeros, tau)
+        out = jax.lax.fori_loop(0, T, cell, init)
+        last_pe = out[1]
+        mk = jnp.max(last_pe)
+        if with_ret:
+            mk = jnp.maximum(mk, out[3])
+        mk_ref[0] = mk
+
+    return kernel
 
 
 def asap_replay_call(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
-                     *, interpret: bool = False):
+                     ret=None, *, topology: str = "chain",
+                     interpret: bool = False):
     """Replay a packed bucket: w_cell/gamma [B,m,T], z/latency [B,m-1],
-    tau [B,m], vcomm/vcomp/rel [B,T], valid [T] -> (cs, ce, ps, pe, mk)."""
+    tau [B,m], vcomm/vcomp/rel (and optional ret) [B,T], valid [T] ->
+    (cs, ce, ps, pe, mk), or (cs, ce, ps, pe, rs, re, mk) when ``ret`` is
+    given (the result-return phase)."""
     B, m, T = gamma.shape
     if m < 2:
         raise ValueError("asap_replay kernel needs m >= 2 (no links otherwise)")
+    with_ret = ret is not None
     dt = gamma.dtype
     spec_mT = pl.BlockSpec((1, m, T), lambda b: (b, 0, 0))
     spec_links = pl.BlockSpec((1, m - 1), lambda b: (b, 0))
@@ -120,18 +242,33 @@ def asap_replay_call(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
     spec_shared = pl.BlockSpec((T,), lambda b: (0,))
     spec_lT = pl.BlockSpec((1, m - 1, T), lambda b: (b, 0, 0))
     spec_scalar = pl.BlockSpec((1,), lambda b: (b,))
+    in_specs = [spec_mT, spec_links, spec_links, spec_m, spec_T, spec_T, spec_T]
+    inputs = [w_cell, z, latency, tau, vcomm, vcomp, rel]
+    if with_ret:
+        in_specs.append(spec_T)
+        inputs.append(ret)
+    in_specs += [spec_shared, spec_mT]
+    inputs += [valid, gamma]
+    out_specs = [spec_lT, spec_lT, spec_mT, spec_mT]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, m - 1, T), dt),
+        jax.ShapeDtypeStruct((B, m - 1, T), dt),
+        jax.ShapeDtypeStruct((B, m, T), dt),
+        jax.ShapeDtypeStruct((B, m, T), dt),
+    ]
+    if with_ret:
+        out_specs += [spec_lT, spec_lT]
+        out_shape += [
+            jax.ShapeDtypeStruct((B, m - 1, T), dt),
+            jax.ShapeDtypeStruct((B, m - 1, T), dt),
+        ]
+    out_specs.append(spec_scalar)
+    out_shape.append(jax.ShapeDtypeStruct((B,), dt))
     return pl.pallas_call(
-        asap_replay_kernel,
+        make_asap_replay_kernel(topology, with_ret),
         grid=(B,),
-        in_specs=[spec_mT, spec_links, spec_links, spec_m,
-                  spec_T, spec_T, spec_T, spec_shared, spec_mT],
-        out_specs=[spec_lT, spec_lT, spec_mT, spec_mT, spec_scalar],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, m - 1, T), dt),
-            jax.ShapeDtypeStruct((B, m - 1, T), dt),
-            jax.ShapeDtypeStruct((B, m, T), dt),
-            jax.ShapeDtypeStruct((B, m, T), dt),
-            jax.ShapeDtypeStruct((B,), dt),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma)
+    )(*inputs)

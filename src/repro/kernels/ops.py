@@ -101,13 +101,20 @@ def simplex_pivot(T, basis, it, status, *, ncols_price, bland_after, max_iter,
     )
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def asap_replay(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma, *,
-                interpret=None):
-    """Fused ASAP replay of a packed bucket (see asap_replay.py); needs m >= 2."""
+@partial(jax.jit, static_argnames=("topology", "interpret"))
+def asap_replay(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
+                retr=None, *, topology="chain", interpret=None):
+    """Fused ASAP replay of a packed bucket (see asap_replay.py); needs m >= 2.
+
+    ``topology`` selects the chain or star recurrence; passing ``retr``
+    ([B, T] per-cell return ratios) activates the result-return phase and
+    appends ``(rs, re)`` to the output tuple.  Both are static structure —
+    each (topology, returns) combination compiles its own kernel, mirroring
+    the arena's bucket key.
+    """
     return asap_replay_call(
-        w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
-        interpret=_interp(interpret),
+        w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma, retr,
+        topology=topology, interpret=_interp(interpret),
     )
 
 

@@ -142,26 +142,50 @@ def simplex_pivot_ref(T, basis, it, status, *, ncols_price, bland_after, max_ite
             jnp.stack(it_out).astype(it.dtype), jnp.stack(status_out).astype(status.dtype))
 
 
-def asap_replay_ref(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma):
+def asap_replay_ref(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma,
+                    retr=None, topology="chain"):
     """Step-by-step ASAP replay: w_cell/gamma [B,m,T], z/latency [B,m-1],
-    tau [B,m], vcomm/vcomp/rel [B,T], valid [T] -> (cs, ce, ps, pe, mk)."""
+    tau [B,m], vcomm/vcomp/rel [B,T], valid [T] -> (cs, ce, ps, pe, mk).
+
+    ``topology`` switches between the chain recurrence (store-and-forward +
+    own-port) and the star's one-port-master send chain; passing ``retr``
+    ([B, T] per-cell return ratios) activates the result-return phase and
+    appends ``(rs, re)`` before ``mk``.
+    """
     B, m, T = gamma.shape
+    star = topology == "star"
     cs = jnp.zeros((B, m - 1, T))
     ce = jnp.zeros((B, m - 1, T))
     ps = jnp.zeros((B, m, T))
     pe = jnp.zeros((B, m, T))
+    rs = jnp.zeros((B, m - 1, T))
+    re = jnp.zeros((B, m - 1, T))
+    mks = []
     for b in range(B):
-        suffix = jnp.cumsum(gamma[b, ::-1], axis=0)[::-1]
-        dcomm = (z[b][:, None] * vcomm[b][None, :] * suffix[1:, :]
+        if star:
+            vol = gamma[b, 1:, :]
+        else:
+            vol = jnp.cumsum(gamma[b, ::-1], axis=0)[::-1][1:, :]
+        dcomm = (z[b][:, None] * vcomm[b][None, :] * vol
                  + latency[b][:, None]) * valid[None, :]
         dcomp = w_cell[b] * vcomp[b][None, :] * gamma[b]
+        if retr is not None:
+            dret = (z[b][:, None] * (retr[b] * vcomm[b])[None, :] * vol
+                    + latency[b][:, None]) * valid[None, :]
         for t in range(T):
             for i in range(m - 1):
-                lo = rel[b, t] if i == 0 else ce[b, i - 1, t]
-                if t > 0:
-                    lo = jnp.maximum(lo, ce[b, i, t - 1])  # (2b)/(3b) own-port
-                    if i + 1 <= m - 2:
-                        lo = jnp.maximum(lo, ce[b, i + 1, t - 1])  # (2)/(3)
+                if star:
+                    lo = rel[b, t]
+                    if i > 0:
+                        lo = jnp.maximum(lo, ce[b, i - 1, t])  # one-port, in cell
+                    elif t > 0:
+                        lo = jnp.maximum(lo, ce[b, m - 2, t - 1])  # across cells
+                else:
+                    lo = rel[b, t] if i == 0 else ce[b, i - 1, t]
+                    if t > 0:
+                        lo = jnp.maximum(lo, ce[b, i, t - 1])  # (2b)/(3b) own-port
+                        if i + 1 <= m - 2:
+                            lo = jnp.maximum(lo, ce[b, i + 1, t - 1])  # (2)/(3)
                 lo = jnp.maximum(lo, 0.0)
                 cs = cs.at[b, i, t].set(lo)
                 ce = ce.at[b, i, t].set(lo + dcomm[i, t])
@@ -171,4 +195,28 @@ def asap_replay_ref(w_cell, z, latency, tau, vcomm, vcomp, rel, valid, gamma):
                 s = jnp.maximum(start, recv)
                 ps = ps.at[b, i, t].set(s)
                 pe = pe.at[b, i, t].set(s + dcomp[i, t])
-    return cs, ce, ps, pe, jnp.max(pe[:, :, -1], axis=1)
+            if retr is not None:
+                order = range(m - 1) if star else range(m - 2, -1, -1)
+                for i in order:
+                    lo = pe[b, i + 1, t]  # (R6)
+                    if star:
+                        if i > 0:
+                            lo = jnp.maximum(lo, re[b, i - 1, t])  # (R1*)
+                        elif t > 0:
+                            lo = jnp.maximum(lo, re[b, m - 2, t - 1])
+                    else:
+                        if i + 1 <= m - 2:
+                            lo = jnp.maximum(lo, re[b, i + 1, t])  # (R1)
+                        if t > 0:
+                            lo = jnp.maximum(lo, re[b, i, t - 1])  # (R2b)
+                    lo = jnp.maximum(lo, 0.0)
+                    rs = rs.at[b, i, t].set(lo)
+                    re = re.at[b, i, t].set(lo + dret[i, t])
+        mk = jnp.max(pe[b, :, -1])
+        if retr is not None:
+            mk = jnp.maximum(mk, jnp.max(re[b]))
+        mks.append(mk)
+    mk = jnp.stack(mks)
+    if retr is not None:
+        return cs, ce, ps, pe, rs, re, mk
+    return cs, ce, ps, pe, mk

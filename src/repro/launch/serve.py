@@ -37,11 +37,18 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--greedy", action="store_true", default=True)
     ap.add_argument("--plan", type=int, default=0,
-                    help="also DLT-plan N request batches over a 4-stage chain")
+                    help="also DLT-plan N request batches over a 4-stage platform")
     ap.add_argument("--plan-backend", default="batched",
                     help="solver-backend registry entry for --plan "
                          "(see repro.core.available_backends()); 'pallas' "
                          "runs the engine's solve/replay in fused kernels")
+    ap.add_argument("--topology", default="chain", choices=("chain", "star"),
+                    help="platform family for --plan: the paper's linear "
+                         "chain, or a one-port master star (stage 0 holds "
+                         "the data, every other stage on its own link)")
+    ap.add_argument("--return-ratio", type=float, default=0.0,
+                    help="result bytes returned to the source per input "
+                         "byte (>0 adds the result-return phase to the plan)")
     ap.add_argument("--auto-t", type=int, default=0, metavar="T_MAX",
                     help="with --plan: sweep 1..T_MAX installments through "
                          "the engine and report the cost-aware T*")
@@ -93,30 +100,34 @@ def main(argv=None):
 
     if args.plan:
         # DLT multi-load plan: N request batches over a heterogeneous 4-stage
-        # chain, speeds scaled to the workload (a batch ~50ms/stage, transfer
-        # ~15ms) so the schedule is non-trivial.  The backend comes from the
-        # solver registry (--plan-backend); with the default batched engine
-        # the solve itself is vmapped, and a second identical planning tick
-        # (the common serving case) hits the solution cache.
+        # platform (--topology picks the chain or the one-port master star),
+        # speeds scaled to the workload (a batch ~50ms/stage, transfer ~15ms)
+        # so the schedule is non-trivial.  The backend comes from the solver
+        # registry (--plan-backend); with the default batched engine the
+        # solve itself is vmapped, and a second identical planning tick (the
+        # common serving case) hits the solution cache.
         fl = decode_flops_per_token(cfg, args.prompt_len) * args.gen_len
         base_speed = fl * args.batch / 0.05
         base_bw = 4.0 * args.prompt_len * args.batch / 0.015
         stages = [StageSpec(f"pod{i}", base_speed / (1 + 0.15 * i)) for i in range(4)]
         links = [LinkSpec(base_bw, 50e-6)] * 3
         loads = [BatchSpec(num_samples=args.batch, bytes_per_sample=4.0 * args.prompt_len,
-                           flops_per_sample=fl) for _ in range(args.plan)]
+                           flops_per_sample=fl,
+                           return_bytes_per_sample=args.return_ratio * 4.0 * args.prompt_len)
+                 for _ in range(args.plan)]
         use_engine = args.plan_backend in ("batched", "pallas")
         if use_engine:  # the jax-backed engine + its solution cache; "pallas"
             # swaps the solve/replay hot loops for the fused kernels
             from repro.engine import PlanService
 
             service = PlanService(backend=args.plan_backend)
-            planner = Planner(stages, links, cache=service.cache)
+            planner = Planner(stages, links, cache=service.cache,
+                              topology=args.topology)
         else:  # serial registry backends: no engine import, no cache
-            planner = Planner(stages, links)
+            planner = Planner(stages, links, topology=args.topology)
         plan = planner.plan(loads, q=2, backend=args.plan_backend)
-        print(f"DLT plan for {args.plan} request batches over 4 stages: "
-              f"makespan={plan.makespan * 1e3:.3f}ms "
+        print(f"DLT plan for {args.plan} request batches over 4 "
+              f"{args.topology} stages: makespan={plan.makespan * 1e3:.3f}ms "
               f"(backend={plan.result.backend})")
         for t, (n, j) in enumerate(plan.cells):
             print(f"  load {n} installment {j}: "

@@ -21,10 +21,16 @@ from .ir import (
     K_GAMMA_ZERO,
     K_LINK_AVAIL,
     K_MAKESPAN,
+    K_MAKESPAN_RET,
+    K_MASTER_PORT,
     K_OWN_PORT,
     K_RECV_AFTER_FWD,
     K_RELEASE_COMM,
     K_RELEASE_COMP,
+    K_RET_AFTER_COMP,
+    K_RET_PORT,
+    K_RET_SERIAL,
+    K_RET_STORE_FORWARD,
     K_STORE_FORWARD,
     Row,
     ScheduleIR,
@@ -53,6 +59,7 @@ __all__ = [
     "K_STORE_FORWARD",
     "K_OWN_PORT",
     "K_RECV_AFTER_FWD",
+    "K_MASTER_PORT",
     "K_RELEASE_COMM",
     "K_RELEASE_COMP",
     "K_LINK_AVAIL",
@@ -61,7 +68,12 @@ __all__ = [
     "K_AVAIL",
     "K_COMPLETENESS",
     "K_MAKESPAN",
+    "K_MAKESPAN_RET",
     "K_EQUAL_FINISH",
     "K_GAMMA_ZERO",
     "K_COMPLETION",
+    "K_RET_AFTER_COMP",
+    "K_RET_STORE_FORWARD",
+    "K_RET_SERIAL",
+    "K_RET_PORT",
 ]

@@ -1,4 +1,5 @@
-"""The schedule-LP intermediate representation: Fig. 6 emitted exactly once.
+"""The schedule-LP intermediate representation: every constraint family
+emitted exactly once, for every topology.
 
 Before this package existed the paper's constraint families (1)-(10) were
 written three times — sparse triplets in ``core/lp.py``, dense ``[B, R, n]``
@@ -8,6 +9,13 @@ debugged three times.  Here the families are walked by ONE emitter,
 :func:`emit_schedule_ir`, which produces a backend-neutral *row stream*; the
 lowerers in :mod:`repro.lpir.lower` turn that stream into whichever matrix
 format a solver backend wants.
+
+The emitter is also where topology lives: ``view.topology`` selects between
+the paper's heterogeneous **chain** (Fig. 6) and the one-port-master **star**
+(Marchal–Rehn–Robert–Vivien), and ``view.has_returns`` appends the
+result-return phase (a third start-time variable block plus its precedence
+families) to either.  A new scenario is written once, here, and inherited by
+every backend.
 
 The trick that lets a single emitter serve both the serial and the batched
 builders is that every coefficient is obtained through a *view* (see
@@ -24,23 +32,33 @@ Row stream format
 * a :class:`Row` is ``(kind, terms, rhs)`` with ``terms = [(col, coeff)]``
   meaning ``sum_j coeff_j * x_{col_j}  <=  rhs`` (ub rows) or ``== rhs``
   (eq rows); ``coeff``/``rhs`` are floats or ``[B]`` vectors;
-* ``kind`` tags the paper family the row came from (see ``K_*`` below) so
-  passes and tests can reason about provenance;
+* ``kind`` tags the family the row came from (see ``K_*`` below) so passes
+  and tests can reason about provenance;
 * variable columns follow :class:`VarLayout` — comm starts, comp starts,
-  gamma, makespan, then optional completion-time variables; identical to the
-  historical ``ScheduleLP``/``BatchedLP`` layouts, so extraction offsets are
-  interchangeable across every backend.
+  gamma, then (when the return phase is active) return starts, makespan,
+  then optional completion-time variables.  Without returns the layout is
+  bit-identical to the historical ``ScheduleLP``/``BatchedLP`` layouts, so
+  extraction offsets are interchangeable across every backend.
 
-Families emitted (paper numbering; DESIGN.md ## The schedule-LP IR):
+Families emitted (paper numbering for the chain; DESIGN.md §6 for the rest):
 
+  chain forward phase
   (1)   store-and-forward            ``comm(i,t)   >= comm_end(i-1,t)``
   (2b)/(3b) own-port serialization   ``comm(i,t)   >= comm_end(i,t-1)``
   (2)/(3) receive-after-forward      ``comm(i,t)   >= comm_end(i+1,t-1)``
+
+  star forward phase (replaces the three above)
+  (1*)  master one-port              ``comm(i,t)   >= comm_end(i-1,t)`` and
+        ``comm(0,t) >= comm_end(m-2,t-1)`` — one total send order
+
+  both topologies
   (4)   release dates                ``comm(0,t)   >= rel(t)``, ``comp(0,t) >= rel(t)``
   (4')  link availability floors     ``comm(i,0)   >= comm_floor(i)``  (zero on
-        plain Fig. 6 instances — this is how the heuristics' equal-finish
-        sub-LP injects platform state; elided when zero)
+        plain instances — this is how the heuristics' equal-finish sub-LP
+        injects platform state; elided when zero)
   (6)   compute-after-receive        ``comp(i,t)   >= comm_end(i-1,t)``
+        (link i-1 feeds P_i in both topologies; only ``comm_end``'s volume
+        terms differ — suffix on the chain, own fraction on the star)
   (8)/(9) compute serialization      ``comp(i,t)   >= comp_end(i,t-1)``
   (10)  availability dates           ``comp(i,0)   >= tau(i)``
   (12)  completeness (eq)            ``sum_{i,t: load(t)=n} gamma(i,t) == 1``
@@ -49,13 +67,25 @@ Families emitted (paper numbering; DESIGN.md ## The schedule-LP IR):
         ``gamma(i,t) == 0`` for non-participants
   (§5)  completion-time variables    ``C_n >= comp_end(i, last cell of n)``
 
+  result-return phase (when ``view.has_returns``)
+  (R6)  results exist after compute  ``ret(i,t)    >= comp_end(i+1,t)``
+  (R1)  chain backward forwarding    ``ret(i,t)    >= ret_end(i+1,t)``
+  (R2b) chain per-link serialization ``ret(i,t)    >= ret_end(i,t-1)``
+  (R1*) star master receive port     ``ret(i,t)    >= ret_end(i-1,t)`` and
+        ``ret(0,t) >= ret_end(m-2,t-1)``
+  (R13) makespan covers returns      ``mk >= ret_end(i,T-1)``
+  (R§5) completion covers returns    ``C_n >= ret_end(i, last cell of n)``
+
 Dead-row elision (:func:`elide_dead_rows`) drops the single-variable floor
 families whose right-hand side is identically zero — they reduce to
 ``x >= 0``, which the standard form already enforces.  ``granularity="row"``
 reproduces the serial builder's per-cell behaviour; ``granularity="family"``
 reproduces the batched builder's bucket-wide decision (the row count must
 stay batch-constant, so a family is only dropped when NO instance in the
-bucket activates ANY of its rows).
+bucket activates ANY of its rows).  The elidable set is topology-independent
+because every precedence family — including the star's one-port rows and the
+whole return phase — is multi-variable and therefore never elidable; only
+the four floor families qualify, on either topology.
 """
 
 from __future__ import annotations
@@ -74,6 +104,7 @@ __all__ = [
     "K_STORE_FORWARD",
     "K_OWN_PORT",
     "K_RECV_AFTER_FWD",
+    "K_MASTER_PORT",
     "K_RELEASE_COMM",
     "K_RELEASE_COMP",
     "K_LINK_AVAIL",
@@ -82,15 +113,21 @@ __all__ = [
     "K_AVAIL",
     "K_COMPLETENESS",
     "K_MAKESPAN",
+    "K_MAKESPAN_RET",
     "K_EQUAL_FINISH",
     "K_GAMMA_ZERO",
     "K_COMPLETION",
+    "K_RET_AFTER_COMP",
+    "K_RET_STORE_FORWARD",
+    "K_RET_SERIAL",
+    "K_RET_PORT",
 ]
 
 # constraint-family tags (paper numbering in the docstring above)
-K_STORE_FORWARD = "store_forward"  # (1)
-K_OWN_PORT = "own_port"  # (2b)/(3b)
-K_RECV_AFTER_FWD = "recv_after_fwd"  # (2)/(3)
+K_STORE_FORWARD = "store_forward"  # (1), chain
+K_OWN_PORT = "own_port"  # (2b)/(3b), chain
+K_RECV_AFTER_FWD = "recv_after_fwd"  # (2)/(3), chain
+K_MASTER_PORT = "master_port"  # (1*), star one-port send serialization
 K_RELEASE_COMM = "release_comm"  # (4) on comm starts
 K_RELEASE_COMP = "release_comp"  # (4) on comp starts
 K_LINK_AVAIL = "link_avail"  # (4') platform link floors
@@ -99,12 +136,19 @@ K_COMP_SERIAL = "comp_serial"  # (8)/(9)
 K_AVAIL = "avail"  # (10)
 K_COMPLETENESS = "completeness"  # (12), equality
 K_MAKESPAN = "makespan"  # (13)
+K_MAKESPAN_RET = "makespan_ret"  # (R13) makespan covers return arrivals
 K_EQUAL_FINISH = "equal_finish"  # equal-finish variant of (13), equality
 K_GAMMA_ZERO = "gamma_zero"  # non-participant pin, equality
 K_COMPLETION = "completion"  # §5 completion-time rows
+K_RET_AFTER_COMP = "ret_after_comp"  # (R6) results exist after compute
+K_RET_STORE_FORWARD = "ret_store_forward"  # (R1), chain backward forwarding
+K_RET_SERIAL = "ret_serial"  # (R2b), chain per-link return serialization
+K_RET_PORT = "ret_port"  # (R1*), star receive-port serialization
 
 # single-variable floor families: their rows are ``x >= rhs`` and become the
-# standard form's ``x >= 0`` when rhs == 0, hence safely removable
+# standard form's ``x >= 0`` when rhs == 0, hence safely removable.  Every
+# topology-specific precedence family (chain, star, return phase) is
+# multi-variable, so this set needs no topology dispatch.
 ELIDABLE_KINDS = frozenset(
     {K_RELEASE_COMM, K_RELEASE_COMP, K_LINK_AVAIL, K_AVAIL}
 )
@@ -121,7 +165,13 @@ class Row:
 
 @dataclasses.dataclass(frozen=True)
 class VarLayout:
-    """Column layout shared by every lowering (matches the historical builders)."""
+    """Column layout shared by every lowering.
+
+    Without a return phase this matches the historical builders exactly:
+    comm starts, comp starts, gamma, makespan, optional completion vars.
+    With returns, the return-start block slots in between gamma and the
+    makespan (``off_ret``; -1 when absent).
+    """
 
     m: int
     T: int
@@ -131,6 +181,7 @@ class VarLayout:
     off_mk: int
     off_cn: int  # -1 when completion-time variables are absent
     n_vars: int
+    off_ret: int = -1  # -1 when the return phase is absent
 
     def comm(self, i: int, t: int) -> int:
         return self.off_comm + i * self.T + t
@@ -140,6 +191,9 @@ class VarLayout:
 
     def gam(self, i: int, t: int) -> int:
         return self.off_gamma + i * self.T + t
+
+    def ret(self, i: int, t: int) -> int:
+        return self.off_ret + i * self.T + t
 
 
 @dataclasses.dataclass
@@ -158,18 +212,19 @@ class ScheduleIR:
         return self.layout.n_vars
 
 
-def _layout_for(m: int, T: int, n_loads: int, want_cn: bool) -> VarLayout:
+def _layout_for(m: int, T: int, n_loads: int, want_cn: bool, want_ret: bool) -> VarLayout:
     n_comm = max(m - 1, 0) * T
     n_comp = m * T
     off_comm = 0
     off_comp = n_comm
     off_gamma = n_comm + n_comp
-    off_mk = off_gamma + m * T
+    off_ret = off_gamma + m * T if want_ret else -1
+    off_mk = off_gamma + m * T + (n_comm if want_ret else 0)
     off_cn = off_mk + 1 if want_cn else -1
     n_vars = off_mk + 1 + (n_loads if want_cn else 0)
     return VarLayout(
         m=m, T=T, off_comm=off_comm, off_comp=off_comp, off_gamma=off_gamma,
-        off_mk=off_mk, off_cn=off_cn, n_vars=n_vars,
+        off_mk=off_mk, off_cn=off_cn, n_vars=n_vars, off_ret=off_ret,
     )
 
 
@@ -180,11 +235,12 @@ def emit_schedule_ir(
     beta: float = 0.0,
     equal_finish=None,
 ) -> ScheduleIR:
-    """Walk the Fig. 6 constraint families once over ``view``.
+    """Walk the constraint families once over ``view``.
 
     ``view`` is any object satisfying the coefficient protocol of
     :mod:`repro.lpir.views` (``m``, ``T``, ``batch``, ``load_of_cell``,
-    ``n_loads`` plus the accessors ``z/K/tau/comm_floor/vcomm/vcomp/rel/w``).
+    ``n_loads``, ``topology``, ``has_returns`` plus the accessors
+    ``z/K/tau/comm_floor/vcomm/vcomp/rel/ret/w``).
 
     ``equal_finish`` (bool [m] or None) switches the (13) makespan family
     into the equal-finish mode the [18]/[19] heuristics are built on: the
@@ -192,20 +248,43 @@ def emit_schedule_ir(
     (equality rows) and non-participants' fractions are pinned to zero.
     """
     m, T = view.m, view.T
+    topology = getattr(view, "topology", "chain")
+    if topology not in ("chain", "star"):
+        raise ValueError(f"unknown topology {topology!r}")
+    star = topology == "star"
+    want_ret = bool(getattr(view, "has_returns", False)) and m > 1
     want_cn = objective == "completion"
-    if want_cn and equal_finish is not None:
-        raise ValueError("equal_finish only applies to the makespan objective")
-    lay = _layout_for(m, T, view.n_loads, want_cn)
+    if equal_finish is not None:
+        if want_cn:
+            raise ValueError("equal_finish only applies to the makespan objective")
+        if want_ret:
+            raise ValueError("equal_finish mode has no return phase (chain heuristics only)")
+    lay = _layout_for(m, T, view.n_loads, want_cn, want_ret)
     ub: list[Row] = []
     eq: list[Row] = []
 
-    def comm_end_terms(i: int, t: int):
-        """comm_end(i, t) as (linear terms, constant) — K_i + z_i V_comm suffix."""
-        terms = [(lay.comm(i, t), 1.0)]
-        coef = view.z(i) * view.vcomm(t)
-        for k in range(i + 1, m):
-            terms.append((lay.gam(k, t), coef))
+    def _msg_end_terms(start_col: int, i: int, t: int, coef):
+        """A link-i message end as (linear terms, constant): start + K_i +
+        coef * vol(i, t), where vol is the topology's link volume — the
+        worker's own fraction on a star, the forwarded suffix on a chain.
+        One helper for both phases so the volume structure exists once."""
+        terms = [(start_col, 1.0)]
+        if star:  # link i carries only worker i+1's own fraction
+            terms.append((lay.gam(i + 1, t), coef))
+        else:  # chain link i forwards the whole suffix
+            for k in range(i + 1, m):
+                terms.append((lay.gam(k, t), coef))
         return terms, view.K(i)
+
+    def comm_end_terms(i: int, t: int):
+        """comm_end(i, t) — K_i + z_i V_comm vol."""
+        return _msg_end_terms(lay.comm(i, t), i, t, view.z(i) * view.vcomm(t))
+
+    def ret_end_terms(i: int, t: int):
+        """ret_end(i, t): the forward message mirrored with the return ratio."""
+        return _msg_end_terms(
+            lay.ret(i, t), i, t, view.z(i) * view.vcomm(t) * view.ret(t)
+        )
 
     def comp_end_terms(i: int, t: int):
         return [(lay.comp(i, t), 1.0), (lay.gam(i, t), view.w(i, t) * view.vcomp(t))], 0.0
@@ -217,16 +296,24 @@ def emit_schedule_ir(
 
     for t in range(T):
         for i in range(m - 1):
-            if i >= 1:  # (1) store-and-forward
-                rt, rc = comm_end_terms(i - 1, t)
-                ge(K_STORE_FORWARD, [(lay.comm(i, t), 1.0)], rt, rc)
-            if t >= 1:
-                rt, rc = comm_end_terms(i, t - 1)  # (2b)/(3b) own-port
-                ge(K_OWN_PORT, [(lay.comm(i, t), 1.0)], rt, rc)
-                if i + 1 <= m - 2:  # (2)/(3) receive-after-forward
-                    rt, rc = comm_end_terms(i + 1, t - 1)
-                    ge(K_RECV_AFTER_FWD, [(lay.comm(i, t), 1.0)], rt, rc)
-            if i == 0:  # (4) release dates on the head link
+            if star:
+                if i >= 1:  # (1*) master one-port, within the cell
+                    rt, rc = comm_end_terms(i - 1, t)
+                    ge(K_MASTER_PORT, [(lay.comm(i, t), 1.0)], rt, rc)
+                elif t >= 1:  # (1*) master one-port, across cells
+                    rt, rc = comm_end_terms(m - 2, t - 1)
+                    ge(K_MASTER_PORT, [(lay.comm(0, t), 1.0)], rt, rc)
+            else:
+                if i >= 1:  # (1) store-and-forward
+                    rt, rc = comm_end_terms(i - 1, t)
+                    ge(K_STORE_FORWARD, [(lay.comm(i, t), 1.0)], rt, rc)
+                if t >= 1:
+                    rt, rc = comm_end_terms(i, t - 1)  # (2b)/(3b) own-port
+                    ge(K_OWN_PORT, [(lay.comm(i, t), 1.0)], rt, rc)
+                    if i + 1 <= m - 2:  # (2)/(3) receive-after-forward
+                        rt, rc = comm_end_terms(i + 1, t - 1)
+                        ge(K_RECV_AFTER_FWD, [(lay.comm(i, t), 1.0)], rt, rc)
+            if i == 0:  # (4) release dates on the first link
                 ge(K_RELEASE_COMM, [(lay.comm(0, t), 1.0)], [], view.rel(t))
             if t == 0:  # (4') link availability floors (platform state)
                 ge(K_LINK_AVAIL, [(lay.comm(i, 0), 1.0)], [], view.comm_floor(i))
@@ -239,8 +326,30 @@ def emit_schedule_ir(
                 ge(K_COMP_SERIAL, [(lay.comp(i, t), 1.0)], rt, rc)
             if t == 0:  # (10) availability dates
                 ge(K_AVAIL, [(lay.comp(i, 0), 1.0)], [], view.tau(i))
-            if i == 0:  # (4) release dates on the head processor
+            if i == 0:  # (4) release dates on the source processor
                 ge(K_RELEASE_COMP, [(lay.comp(0, t), 1.0)], [], view.rel(t))
+
+    # ---- result-return phase ----
+    if want_ret:
+        for t in range(T):
+            for i in range(m - 1):
+                # (R6) results exist only after P_{i+1} computes
+                rt, rc = comp_end_terms(i + 1, t)
+                ge(K_RET_AFTER_COMP, [(lay.ret(i, t), 1.0)], rt, rc)
+                if star:
+                    if i >= 1:  # (R1*) master receive port, within the cell
+                        rt, rc = ret_end_terms(i - 1, t)
+                        ge(K_RET_PORT, [(lay.ret(i, t), 1.0)], rt, rc)
+                    elif t >= 1:  # (R1*) across cells
+                        rt, rc = ret_end_terms(m - 2, t - 1)
+                        ge(K_RET_PORT, [(lay.ret(0, t), 1.0)], rt, rc)
+                else:
+                    if i + 1 <= m - 2:  # (R1) backward store-and-forward
+                        rt, rc = ret_end_terms(i + 1, t)
+                        ge(K_RET_STORE_FORWARD, [(lay.ret(i, t), 1.0)], rt, rc)
+                    if t >= 1:  # (R2b) per-link return serialization
+                        rt, rc = ret_end_terms(i, t - 1)
+                        ge(K_RET_SERIAL, [(lay.ret(i, t), 1.0)], rt, rc)
 
     # (12) completeness — one equality per load, in load order
     load_of_cell = list(view.load_of_cell)
@@ -258,6 +367,12 @@ def emit_schedule_ir(
         for i in range(m):
             rt, rc = comp_end_terms(i, T - 1)
             ge(K_MAKESPAN, [(lay.off_mk, 1.0)], rt, rc)
+        if want_ret:
+            # (R13): the serialization families make ret_end(i, .) monotone
+            # in t on both topologies, so covering the last cell covers all
+            for i in range(m - 1):
+                rt, rc = ret_end_terms(i, T - 1)
+                ge(K_MAKESPAN_RET, [(lay.off_mk, 1.0)], rt, rc)
     else:
         part = np.asarray(equal_finish, dtype=bool)
         if part.shape != (m,):
@@ -281,6 +396,10 @@ def emit_schedule_ir(
             for i in range(m):
                 rt, rc = comp_end_terms(i, last_cell[n])
                 ge(K_COMPLETION, [(lay.off_cn + n, 1.0)], rt, rc)
+            if want_ret:
+                for i in range(m - 1):
+                    rt, rc = ret_end_terms(i, last_cell[n])
+                    ge(K_COMPLETION, [(lay.off_cn + n, 1.0)], rt, rc)
 
     # objective
     c = np.zeros(lay.n_vars)

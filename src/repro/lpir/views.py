@@ -4,17 +4,24 @@ A view presents one scheduling problem (or a whole packed bucket of them) to
 the emitter through a uniform accessor protocol:
 
   attributes  ``m``, ``T`` (total cells), ``batch`` (None or B),
-              ``load_of_cell`` ([T] ints), ``n_loads``
+              ``load_of_cell`` ([T] ints), ``n_loads``,
+              ``topology`` ("chain" | "star"),
+              ``has_returns`` (bool — emit the result-return phase)
   accessors   ``z(i)``, ``K(i)``          — link i rate / latency
               ``tau(i)``                  — processor availability floor
               ``comm_floor(i)``           — link availability floor (4')
               ``vcomm(t)``, ``vcomp(t)``  — cell t volumes
               ``rel(t)``                  — cell t release date
+              ``ret(t)``                  — cell t result-return ratio
               ``w(i, t)``                 — seconds/unit for P_i on cell t
 
 Scalar views return Python floats; :class:`BucketView` returns ``[B]``
 vectors.  numpy broadcasting makes the emitter's arithmetic identical over
-both, which is what lets Fig. 6 be written exactly once.
+both, which is what lets every constraint family be written exactly once.
+
+``topology``/``has_returns`` are *structural* — they select which families
+the emitter walks and therefore the row pattern — so for a bucket view they
+must be shared by the whole batch (the arena's bucket key guarantees this).
 """
 
 from __future__ import annotations
@@ -35,18 +42,20 @@ class InstanceView:
         self.load_of_cell = [n for n, _ in inst.cells()]
         self.T = len(self.load_of_cell)
         self.n_loads = inst.N
+        self.topology = inst.topology
+        self.has_returns = inst.has_returns
 
     def z(self, i):
-        return float(self.inst.chain.z[i])
+        return float(self.inst.platform.z[i])
 
     def K(self, i):
-        return float(self.inst.chain.latency[i])
+        return float(self.inst.platform.latency[i])
 
     def tau(self, i):
-        return float(self.inst.chain.tau[i])
+        return float(self.inst.platform.tau[i])
 
     def comm_floor(self, i):
-        return 0.0  # Fig. 6 links start free; heuristics override via EqualFinishView
+        return 0.0  # links start free; heuristics override via EqualFinishView
 
     def vcomm(self, t):
         return float(self.inst.loads.v_comm[self.load_of_cell[t]])
@@ -57,13 +66,17 @@ class InstanceView:
     def rel(self, t):
         return float(self.inst.loads.release[self.load_of_cell[t]])
 
+    def ret(self, t):
+        return float(self.inst.loads.return_ratio[self.load_of_cell[t]])
+
     def w(self, i, t):
         return self.inst.w_of(i, self.load_of_cell[t])
 
 
 class BucketView:
-    """One exact ``(m, T, q)`` :class:`repro.engine.arena.PackedBucket` —
-    every accessor returns the coefficient for ALL B instances at once."""
+    """One exact ``(topology, returns, m, T, q)``
+    :class:`repro.engine.arena.PackedBucket` — every accessor returns the
+    coefficient for ALL B instances at once."""
 
     def __init__(self, bucket):
         if bucket.m != bucket.m_real or bucket.T != bucket.T_real:
@@ -74,6 +87,8 @@ class BucketView:
         self.T = bucket.T
         self.load_of_cell = [int(x) for x in bucket.load_of_cell]
         self.n_loads = bucket.n_loads
+        self.topology = bucket.topology
+        self.has_returns = bucket.has_returns
 
     def z(self, i):
         return self.bucket.z[:, i]
@@ -96,24 +111,30 @@ class BucketView:
     def rel(self, t):
         return self.bucket.rel_cell[:, t]
 
+    def ret(self, t):
+        return self.bucket.ret_cell[:, t]
+
     def w(self, i, t):
         return self.bucket.w_cell[:, i, t]
 
 
 class EqualFinishView:
-    """The [18]/[19] per-load building block as a one-cell Fig. 6 problem.
+    """The [18]/[19] per-load building block as a one-cell chain problem.
 
     One load ``n`` of ``inst``, distributed in a single installment, with the
     platform state injected as floors: ``proc_free`` becomes the availability
     family (10) and ``link_ready`` the link-availability family (4').  Paired
     with ``emit_schedule_ir(..., equal_finish=participants)`` this reproduces
-    the equal-finish sub-LP the heuristics solve per load.
+    the equal-finish sub-LP the heuristics solve per load.  The heuristics
+    are chain-only, so this view is always a chain with no return phase.
     """
 
     batch = None
     T = 1
     load_of_cell = (0,)
     n_loads = 1
+    topology = "chain"
+    has_returns = False
 
     def __init__(self, inst, n: int, proc_free, link_ready):
         self.inst = inst
@@ -123,10 +144,10 @@ class EqualFinishView:
         self.link_ready = np.asarray(link_ready, dtype=np.float64)
 
     def z(self, i):
-        return float(self.inst.chain.z[i])
+        return float(self.inst.platform.z[i])
 
     def K(self, i):
-        return float(self.inst.chain.latency[i])
+        return float(self.inst.platform.latency[i])
 
     def tau(self, i):
         return float(self.proc_free[i])
@@ -142,6 +163,9 @@ class EqualFinishView:
 
     def rel(self, t):
         return float(self.inst.loads.release[self.n])
+
+    def ret(self, t):
+        return 0.0
 
     def w(self, i, t):
         return self.inst.w_of(i, self.n)

@@ -45,7 +45,7 @@ __all__ = ["stage_batches", "make_dlt_train_step", "ChainReplanner"]
 
 
 class ChainReplanner:
-    """Online replanning for a running chain, routed through the registry.
+    """Online replanning for a running platform, routed through the registry.
 
     Owns a :class:`repro.core.planner.Planner` plus an engine solution cache
     (repro.engine): every replan — straggler drift, stage failure, or a bulk
@@ -53,7 +53,9 @@ class ChainReplanner:
     ``backend`` registry entry (the batched engine by default; ``"pallas"``
     runs the same engine with its solve/replay hot loops in fused Pallas
     kernels), and platform states the chain has seen before replay from the
-    cache instead of re-solving.
+    cache instead of re-solving.  The topology rides on the planner
+    (``Planner(topology="star")`` replans a one-port master fleet with the
+    same cache/backend plumbing); the historical name stays.
     """
 
     def __init__(self, planner: Planner, q: int | list = 2, backend="batched"):
@@ -118,7 +120,8 @@ class ChainReplanner:
                 _dc.replace(s, flops_per_sec=s.flops_per_sec * float(f))
                 for s, f in zip(self.planner.stages, scales)
             ]
-            p = Planner(stages, self.planner.links, ewma=self.planner.ewma)
+            p = Planner(stages, self.planner.links, ewma=self.planner.ewma,
+                        topology=self.planner.topology)
             insts.append(p.to_instance(batches, q=self.q))
         solver = get_backend(self.backend, cache=self.planner._cache)
         results = solver.solve_many([SolveRequest(instance=i) for i in insts])

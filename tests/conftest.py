@@ -1,0 +1,32 @@
+"""Shared pytest configuration: a deterministic hypothesis profile for CI.
+
+The property/fuzz suites (test_*_properties.py, test_scheduling_fuzz.py)
+grow with every scenario axis — topology, return phase, release dates — and
+randomized example selection would make them a flake risk at exactly the
+rate they grow.  This registers and loads a pinned profile:
+
+* ``derandomize=True`` — examples are derived deterministically from each
+  test's structure (the "fixed seed": same test body => same examples,
+  every run, every machine);
+* ``deadline=None`` — the first example of a shape pays JAX compilation;
+  wall-clock deadlines would flag those as flaky-slow;
+* ``database=None`` — no cross-run example database, so CI never replays a
+  stale failure from a cache restore.
+
+Suites that need hypothesis still importorskip it; without hypothesis this
+conftest is a no-op and the seeded non-hypothesis arms keep the coverage.
+"""
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile(
+        "repro-deterministic",
+        deadline=None,
+        derandomize=True,
+        database=None,
+        print_blob=True,
+    )
+    settings.load_profile("repro-deterministic")
+except ImportError:  # hypothesis is a dev extra; the suites importorskip it
+    pass

@@ -118,7 +118,8 @@ def test_arena_scatter_restores_caller_order():
     flat = arena.scatter([[f"{b.key}/{i}" for i in range(b.B)]
                           for b in arena.buckets])
     for inst, tag in zip(insts, flat):
-        key = (inst.m, inst.total_installments, tuple(inst.q))
+        key = (inst.topology, inst.has_returns, inst.m,
+               inst.total_installments, tuple(inst.q))
         assert tag.startswith(str(key))
 
 

@@ -70,10 +70,14 @@ def assert_lowering_parity(insts: list) -> None:
 
 
 def random_population(rng, B, m, n, q, with_release=False, with_tau=False,
-                      with_latency=False, unrelated=False) -> list:
+                      with_latency=False, unrelated=False, topology="chain",
+                      with_returns=False) -> list:
+    from repro.core.instance import Star
+
+    platform_cls = Star if topology == "star" else Chain
     insts = []
     for _ in range(B):
-        chain = Chain(
+        platform = platform_cls(
             w=rng.uniform(0.1, 10.0, m),
             z=rng.uniform(0.01, 10.0, m - 1),
             tau=rng.uniform(0.0, 2.0, m) if with_tau else 0.0,
@@ -83,11 +87,13 @@ def random_population(rng, B, m, n, q, with_release=False, with_tau=False,
             v_comm=rng.uniform(0.1, 5.0, n),
             v_comp=rng.uniform(0.1, 5.0, n),
             release=rng.uniform(0.0, 3.0, n) if with_release else 0.0,
+            return_ratio=rng.uniform(0.1, 1.0, n) if with_returns else 0.0,
         )
-        inst = Instance(chain, loads, q=q)
+        inst = Instance(platform, loads, q=q)
         if unrelated:
             mult = rng.uniform(0.5, 2.0, size=(m, n))
-            inst = Instance(chain, loads, q=q, w_per_load=chain.w[:, None] * mult)
+            inst = Instance(platform, loads, q=q,
+                            w_per_load=platform.w[:, None] * mult)
         insts.append(inst)
     return insts
 
@@ -99,6 +105,12 @@ def random_population(rng, B, m, n, q, with_release=False, with_tau=False,
     (4, 3, 1, {"with_tau": True, "unrelated": True}),
     (3, 2, 3, {"with_release": True, "with_tau": True, "with_latency": True,
                "unrelated": True}),
+    # topology/return axes: star one-port rows + the return variable block
+    (3, 2, 2, {"topology": "star"}),
+    (4, 2, 1, {"topology": "star", "with_release": True, "with_tau": True,
+               "with_latency": True, "with_returns": True}),
+    (3, 2, 2, {"with_returns": True, "with_latency": True}),
+    (2, 1, 2, {"topology": "star", "with_returns": True}),
 ])
 def test_lowering_parity_seeded(m, n, q, kw):
     rng = np.random.default_rng(m * 100 + n * 10 + q)

@@ -1,25 +1,30 @@
-"""Differential scheduling fuzz: serial simplex == batched == pallas.
+"""Differential scheduling fuzz: serial simplex == batched == pallas,
+over every scenario axis the IR emits.
 
 The paper's claim that the LP dominates the heuristics is only as good as
 the solver, and the engine now has three implementations of it (NumPy
 reference, vmapped jnp, fused Pallas kernels).  This suite generates random
-chains — heterogeneous ``w``/``z``/``tau``, release dates, affine latencies
-(the (2b)/(3b) own-port rows), ``q`` = 1..4, ``m`` = 2..8 — and asserts all
-three agree on makespans at <= 1e-9 *and* on status codes, including
-deliberately infeasible / unbounded / degenerate raw LPs, so the
-non-``optimal`` statuses are parity-tested for the first time.
+platforms — topology ∈ {chain, star}, heterogeneous ``w``/``z``/``tau``,
+release dates, affine latencies (the (2b)/(3b) own-port rows / the star's
+one-port master rows), result-return ratios ∈ {0, >0}, ``q`` = 1..4,
+``m`` = 2..8 — and asserts all three agree on makespans at <= 1e-9 *and* on
+status codes.  Schedule LPs are feasible by construction on both topologies,
+so the infeasible / unbounded / degenerate status parity is pinned on raw
+LP stacks below (those paths are topology-independent: the batched simplex
+sees only matrices), including the degenerate star-routing regression at
+the backend seam.
 
-Hypothesis drives the generator when available (CI installs it); a seeded
-sweep over the same generator keeps the differential coverage when it is
-not.  Shapes are drawn from a fixed menu so the suite compiles a bounded
-set of programs.
+Hypothesis drives the generator when available (CI installs it; the
+deterministic profile is pinned in conftest.py); a seeded sweep over the
+same generator keeps the differential coverage when it is not.  Shapes are
+drawn from a fixed menu so the suite compiles a bounded set of programs.
 """
 
 import numpy as np
 import pytest
 
 from repro.core.backends import SolveRequest, get_backend
-from repro.core.instance import Chain, Instance, Loads
+from repro.core.instance import Chain, Instance, Loads, Star
 from repro.core.simplex import solve_simplex
 from repro.core.simulator import simulate
 from repro.engine import makespans, solve_bulk
@@ -36,13 +41,16 @@ except ImportError:  # pragma: no cover - CI installs hypothesis
     HAVE_HYPOTHESIS = False
 
 # (m, n_loads, q) — bounded so the three backends compile a fixed set of
-# shapes; spans the smallest legal chain up to the §6 protocol's m=8
+# shapes; spans the smallest legal platform up to the §6 protocol's m=8
 SHAPES = [(2, 1, 1), (2, 2, 2), (3, 2, 1), (4, 1, 3), (5, 2, 2),
           (6, 1, 4), (8, 2, 1)]
 
+TOPOLOGIES = ("chain", "star")
 
-def random_chain_instance(rng, m, n_loads, q, with_latency, with_release,
-                          with_tau) -> Instance:
+
+def random_platform_instance(rng, m, n_loads, q, with_latency, with_release,
+                             with_tau, topology="chain",
+                             with_returns=False) -> Instance:
     w = rng.uniform(0.2, 2.0, size=m)
     z = rng.uniform(0.05, 1.0, size=m - 1)
     tau = rng.uniform(0.0, 1.0, size=m) if with_tau else 0.0
@@ -50,9 +58,11 @@ def random_chain_instance(rng, m, n_loads, q, with_latency, with_release,
     v_comp = rng.uniform(0.5, 3.0, size=n_loads)
     v_comm = v_comp * rng.uniform(0.2, 2.0, size=n_loads)
     release = rng.uniform(0.0, 2.0, size=n_loads) if with_release else 0.0
+    ret = rng.uniform(0.1, 1.0, size=n_loads) if with_returns else 0.0
+    platform_cls = Star if topology == "star" else Chain
     return Instance(
-        Chain(w=w, z=z, tau=tau, latency=lat),
-        Loads(v_comm=v_comm, v_comp=v_comp, release=release),
+        platform_cls(w=w, z=z, tau=tau, latency=lat),
+        Loads(v_comm=v_comm, v_comp=v_comp, release=release, return_ratio=ret),
         q=q,
     )
 
@@ -74,49 +84,59 @@ def assert_three_way_parity(inst: Instance) -> None:
     assert rp.backend in ("pallas", rb.backend)  # serial fallback matches
 
 
-def _fuzz_case(shape_idx, with_latency, with_release, with_tau, seed):
+def _fuzz_case(shape_idx, with_latency, with_release, with_tau, seed,
+               topology="chain", with_returns=False):
     m, n_loads, q = SHAPES[shape_idx % len(SHAPES)]
     rng = np.random.default_rng(seed)
-    inst = random_chain_instance(
-        rng, m, n_loads, q, with_latency, with_release, with_tau)
+    inst = random_platform_instance(
+        rng, m, n_loads, q, with_latency, with_release, with_tau,
+        topology=topology, with_returns=with_returns)
     assert_three_way_parity(inst)
 
 
 # ------------------------------------------------------------- feasible fuzz
 
 
+@pytest.mark.parametrize("topology", TOPOLOGIES)
 @pytest.mark.parametrize("k", range(len(SHAPES)))
-def test_differential_seeded_sweep(k):
-    # the non-hypothesis arm: every shape, every extension toggled on its
-    # own seed — runs in any environment
+def test_differential_seeded_sweep(k, topology):
+    # the non-hypothesis arm: every shape x topology, every extension —
+    # including the return phase — toggled on its own seed; runs anywhere
     _fuzz_case(k, with_latency=bool(k % 2), with_release=bool(k % 3 == 1),
-               with_tau=bool(k % 3 == 2), seed=1000 + k)
+               with_tau=bool(k % 3 == 2), seed=1000 + k, topology=topology,
+               with_returns=bool(k % 2 == 0))
 
 
 if HAVE_HYPOTHESIS:
 
-    @settings(max_examples=10, deadline=None)
+    @settings(max_examples=16, deadline=None)
     @given(
         shape_idx=st.integers(0, len(SHAPES) - 1),
         with_latency=st.booleans(),
         with_release=st.booleans(),
         with_tau=st.booleans(),
+        topology=st.sampled_from(TOPOLOGIES),
+        with_returns=st.booleans(),
         seed=st.integers(0, 2**31 - 1),
     )
     def test_differential_hypothesis(shape_idx, with_latency, with_release,
-                                     with_tau, seed):
-        _fuzz_case(shape_idx, with_latency, with_release, with_tau, seed)
+                                     with_tau, topology, with_returns, seed):
+        _fuzz_case(shape_idx, with_latency, with_release, with_tau, seed,
+                   topology=topology, with_returns=with_returns)
 
 
 def test_bulk_three_way_mixed_population():
     # one solve_bulk call per engine path over a mixed-shape population —
-    # exercises bucketing + the batched<->pallas label/caching plumbing
+    # now spanning both topologies and the return phase in the same call,
+    # exercising the (topology, returns, m, T, q) bucketing + the
+    # batched<->pallas label/caching plumbing
     rng = np.random.default_rng(7)
     insts = []
     for k, (m, n_loads, q) in enumerate(SHAPES[:4]):
-        for _ in range(3):
-            insts.append(random_chain_instance(
-                rng, m, n_loads, q, bool(k % 2), bool(k % 2 == 0), False))
+        for topology in TOPOLOGIES:
+            insts.append(random_platform_instance(
+                rng, m, n_loads, q, bool(k % 2), bool(k % 2 == 0), False,
+                topology=topology, with_returns=bool(k % 2)))
     rb = solve_bulk(insts)
     rp = solve_bulk(insts, use_pallas=True)
     for inst, b, p in zip(insts, rb, rp):
@@ -129,18 +149,24 @@ def test_bulk_three_way_mixed_population():
 def test_replay_kernel_parity_padded_and_exact():
     # the ASAP-replay kernel against the NumPy simulator on random
     # fractions, both exact buckets and ladder-padded ones (in-kernel
-    # masking of fake cells/processors)
+    # masking of fake cells/processors, forward and return phases alike),
+    # across both topologies
     rng = np.random.default_rng(11)
     insts, gammas = [], []
-    for m, n_loads, q in [(3, 2, 1), (3, 2, 1), (5, 2, 2), (6, 1, 4)]:
-        inst = random_chain_instance(rng, m, n_loads, q, True, True, True)
-        g = np.abs(rng.normal(size=(inst.m, inst.total_installments))) + 0.1
-        cells = list(inst.cells())
-        for n in range(inst.N):
-            cols = [t for t, (load, _) in enumerate(cells) if load == n]
-            g[:, cols] /= g[:, cols].sum()
-        insts.append(inst)
-        gammas.append(g)
+    for topology in TOPOLOGIES:
+        for with_ret, (m, n_loads, q) in zip(
+                (False, True, True, False),
+                [(3, 2, 1), (3, 2, 1), (5, 2, 2), (6, 1, 4)]):
+            inst = random_platform_instance(
+                rng, m, n_loads, q, True, True, True,
+                topology=topology, with_returns=with_ret)
+            g = np.abs(rng.normal(size=(inst.m, inst.total_installments))) + 0.1
+            cells = list(inst.cells())
+            for n in range(inst.N):
+                cols = [t for t, (load, _) in enumerate(cells) if load == n]
+                g[:, cols] /= g[:, cols].sum()
+            insts.append(inst)
+            gammas.append(g)
     ref = [simulate(i, g).makespan for i, g in zip(insts, gammas)]
     for pad in (False, True):
         got = makespans(insts, gammas, pad_shapes=pad, use_pallas=True)
@@ -216,11 +242,13 @@ def test_mixed_status_batch_parity():
 # -------------------------------------------- degenerate-element routing
 
 
-def test_status4_routes_to_serial_identically(monkeypatch):
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_status4_routes_to_serial_identically(monkeypatch, topology):
     # the satellite contract: a degenerate (status-4) element must reach the
     # serial fallback through the pallas backend exactly as through the
-    # batched one.  Degenerate corners essentially never occur on schedule
-    # LPs, so force the flag at the solver seam and compare the full fallout.
+    # batched one, on either topology.  Degenerate corners essentially never
+    # occur on schedule LPs, so force the flag at the solver seam and
+    # compare the full fallout.
     import repro.engine.service as service
 
     real = service.solve_simplex_batched
@@ -235,7 +263,8 @@ def test_status4_routes_to_serial_identically(monkeypatch):
 
     monkeypatch.setattr(service, "solve_simplex_batched", forced)
     rng = np.random.default_rng(3)
-    inst = random_chain_instance(rng, 3, 2, 2, True, False, False)
+    inst = random_platform_instance(rng, 3, 2, 2, True, False, False,
+                                    topology=topology, with_returns=True)
     from repro.engine.service import BatchedBackend, PallasBackend
 
     rb = BatchedBackend().solve(SolveRequest(instance=inst))
