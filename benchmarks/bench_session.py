@@ -1,0 +1,132 @@
+"""Session front-door throughput: submit -> coalesce -> solve, end to end.
+
+Serving-style traffic — a stream of single-problem submits with no caller-
+side batching — for two mixes:
+
+  * chain  — the paper's linear platform (m=3, 2 loads, q=1: the same
+    population bench_engine_throughput times, so the "no regression vs the
+    direct engine path" claim is apples-to-apples);
+  * star   — one-port-master instances with a result-return phase (the
+    PR-4 scenario family) through the identical front door.
+
+Measured per mix:
+
+  * ``session`` inst/s — N staggered ``submit()`` calls against a
+    ``max_batch=64`` session, resolved by ``result()``: the coalescing
+    path the serving tier actually runs (flush count recorded — it must be
+    ~N/64, proving the micro-batching happened);
+  * ``direct`` inst/s — ``solve_bulk`` on the same backend handle with the
+    session layer bypassed: the ceiling.
+
+The front door is bookkeeping around the same vmapped solve, so the
+acceptance bar (full scale) is session >= 50% of direct on the chain mix:
+a Session-layer regression shows up as the ratio collapsing, while an
+engine regression shows up in the direct column AND in
+bench_engine_throughput's own >=10x gate (the raw solve_bulk path those
+CSVs track — absolute inst/s varies several-fold with box contention, so
+cross-run comparisons belong to the speedup ratios, not the raw numbers).
+Smoke runs record the ratios informationally (CI boxes make timing noise).
+
+CSV: bench_out/session_throughput.csv.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.instance import random_instance
+
+from .common import banner, write_csv
+
+N_CHAIN = 1024
+N_STAR = 512
+MAX_BATCH = 64
+
+
+def _mix(rng, n: int, topology: str) -> list:
+    from repro.api import Problem
+
+    ret = 0.25 if topology == "star" else 0.0
+    return [
+        Problem.from_instance(
+            random_instance(rng, m=3, n_loads=2, q=1, topology=topology,
+                            return_ratio=ret)
+        )
+        for _ in range(n)
+    ]
+
+
+def _session_throughput(problems: list, policy) -> tuple:
+    """(inst/s via staggered submits, flush count) on a fresh session."""
+    from repro.api import Session
+
+    warm = Session(policy=policy, max_batch=MAX_BATCH)
+    warm.solve_bulk(problems[:MAX_BATCH])  # compile the bucket shapes
+    sess = Session(policy=policy, max_batch=MAX_BATCH)
+    t0 = time.perf_counter()
+    tickets = [sess.submit(p) for p in problems]
+    for t in tickets:
+        t.result()
+    dt = time.perf_counter() - t0
+    return len(problems) / dt, sess.flush_count
+
+
+def _direct_throughput(problems: list, policy) -> float:
+    """inst/s for one solve_bulk on the same backend, session bypassed."""
+    from repro.api import Session
+
+    sess = Session(policy=policy)
+    sess.solve_bulk(problems)  # warm-up: compile the full-population shapes
+    sess = Session(policy=policy)  # fresh cache so the timed run really solves
+    t0 = time.perf_counter()
+    sess.solve_bulk(problems)
+    return len(problems) / (time.perf_counter() - t0)
+
+
+def main(quick: bool = False) -> dict:
+    from repro.api import Policy
+
+    banner("bench_session (submit -> coalesce -> solve front door)")
+    rng = np.random.default_rng(0)
+    policy = Policy(backend="batched")
+    rows, claims = [], {}
+    ratios = {}
+    for mix, n_full in (("chain", N_CHAIN), ("star", N_STAR)):
+        n = 128 if quick else n_full
+        problems = _mix(rng, n, mix)
+        ips, flushes = _session_throughput(problems, policy)
+        direct = _direct_throughput(problems, policy)
+        ratios[mix] = ips / direct
+        expected_flushes = -(-n // MAX_BATCH)  # ceil
+        print(f"  {mix:>5}: session {ips:8.1f} inst/s in {flushes} flushes "
+              f"(expected <= {expected_flushes + 1})   "
+              f"direct {direct:8.1f} inst/s   ratio {ratios[mix]:.2f}")
+        rows.append([mix, n, MAX_BATCH, flushes, ips, direct, ratios[mix]])
+        # correctness claim at every scale: the coalescer actually batched
+        # (result()-driven tail flush allows one extra)
+        claims[f"{mix}_coalesced"] = flushes <= expected_flushes + 1
+    write_csv(
+        "session_throughput.csv",
+        rows,
+        ["mix", "n", "max_batch", "flushes", "session_inst_per_sec",
+         "direct_inst_per_sec", "session_to_direct_ratio"],
+    )
+    if quick:
+        claims["session_to_direct_chain"] = round(ratios["chain"], 2)
+        claims["session_to_direct_star"] = round(ratios["star"], 2)
+    else:
+        # full scale: the front door keeps >= 50% of the raw engine
+        # throughput (the direct column is the PR-4 16.9k-inst/s path)
+        claims["session_overhead_bounded"] = ratios["chain"] >= 0.5
+    for k, v in claims.items():
+        if isinstance(v, bool):
+            print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'}")
+        else:
+            print(f"  CLAIM {k} = {v} (informational at smoke scale)")
+    return claims
+
+
+if __name__ == "__main__":
+    main()

@@ -23,11 +23,11 @@ def main(argv=None) -> int:
         ap.error("--smoke and --full are mutually exclusive")
     quick = not args.full
     if args.smoke and not args.only:
-        args.only = "engine_throughput,star,kernels"
+        args.only = "engine_throughput,star,kernels,session"
 
     from . import (bench_engine_throughput, bench_kernels, bench_latency_qstar,
-                   bench_lp_scaling, bench_motivating_example, bench_star,
-                   bench_table2, bench_theorem1, roofline)
+                   bench_lp_scaling, bench_motivating_example, bench_session,
+                   bench_star, bench_table2, bench_theorem1, roofline)
 
     benches = {
         "motivating_example": bench_motivating_example.main,
@@ -38,6 +38,7 @@ def main(argv=None) -> int:
         "kernels": bench_kernels.main,
         "engine_throughput": bench_engine_throughput.main,
         "star": bench_star.main,
+        "session": bench_session.main,
         "roofline_single": lambda quick: roofline.main(quick, mesh="single"),
         "roofline_multi": lambda quick: roofline.main(quick, mesh="multi"),
     }

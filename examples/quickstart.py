@@ -1,17 +1,39 @@
-"""Quickstart: the paper's contribution in one page.
+"""Quickstart: the paper's contribution through the one front door.
 
-1. Build the §3 motivating instance (2 processors, 2 loads, lambda=3/4).
-2. Solve it optimally with the Fig. 6 linear program (Q=2 installments) —
-   through the solver-backend registry, with any registered backend.
-3. Compare against the Wong-Veeravalli-Barlas heuristics it supersedes.
-4. Solve a STAR instance (one-port master + heterogeneous workers) with a
-   result-return phase through the exact same registry — the constraint
-   families are emitted once, topology-dispatched, so every backend
-   inherits every scenario (DESIGN.md §6).
-5. Use the same planner to schedule training batches for a real (smoke-size)
-   model on a heterogeneous 3-stage chain, let `plan_auto_T` pick the
-   installment count under a fixed per-installment cost (the practical
-   Theorem-1 chooser), and run one training step per plan cell on CPU.
+Everything routes through ``repro.api`` — a declarative (Problem, Policy)
+pair handed to a Session (DESIGN.md §7):
+
+1. The §3 motivating instance (2 processors, 2 loads, lambda=3/4) solved
+   optimally with the Fig. 6 LP on several backends, vs the heuristics it
+   supersedes.
+2. A STAR platform with a result-return phase through the exact same
+   session — plus the versioned PlanArtifact: JSON out, JSON in, replayed
+   bit-identically (ship plans between processes).
+3. Serving-style traffic: async ``submit()`` tickets coalescing into
+   micro-batched engine solves.
+4. The same LP scheduling real training batches on a heterogeneous chain,
+   with the cost-aware Theorem-1 auto-T* chooser stated as Policy, and one
+   training step per plan cell on CPU.
+
+Migration (old call -> new call):
+
+  =====================================  =====================================
+  historical entry point                 repro.api front door
+  =====================================  =====================================
+  solve(inst, backend="b")               session.solve(problem, Policy(
+                                             installments=q, backend="b"))
+  solve_batch(insts)                     session.solve_bulk(problems)
+  Planner.plan(batches, q, backend)      planner.plan(...) (unchanged shim) or
+                                         session.solve(planner.to_problem(b),
+                                             Policy(installments=q, ...))
+  Planner.plan_auto_T(b, t_max, cost)    session.solve(problem, Policy(
+                                             auto_t=True, t_max=...,
+                                             installment_cost=...))
+  PlanService().submit/flush/result      session.submit(...) -> ticket;
+                                         ticket.result() / session.flush()
+  LPResult / SolveReport                 PlanArtifact (versioned, JSON
+                                         round-trippable, with provenance)
+  =====================================  =====================================
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,60 +41,78 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import PlanArtifact, Policy, Problem, Session
 from repro.config import ShardingPolicy, TrainConfig, get_arch, smoke_variant
-from repro.core import SolveRequest, available_backends, get_backend
-from repro.core.closed_form import example_instance
+from repro.core import available_backends
+from repro.core.closed_form import example_instance, star_single_load_makespan
 from repro.core.heuristics import multi_inst, simple, single_inst
 from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
-from repro.core.solver import solve
 from repro.data import batch_load_spec, make_batch
 from repro.models import init_params
 from repro.runtime import make_train_state, make_train_step
 
-# ---------------------------------------------------------------------- 1+2+3
+# one session owns the backend handles, the solution cache, and the submit
+# queue — every solve below goes through it
+session = Session()
+
+# ------------------------------------------------------------------- 1
 print("=== the paper's example: 2 identical processors, lambda = 3/4 ===")
-inst = example_instance(0.75, q=2)
-lp = solve(inst)  # the classic shim: routes through the "auto" backend
-print(f"LP (Fig. 6, Q=2 installments): makespan = {lp.makespan:.6f}"
+paper = Problem.from_instance(example_instance(0.75))
+art = session.solve(paper, Policy(installments=2))  # Fig. 6, Q=2 installments
+print(f"LP (Fig. 6, Q=2 installments): makespan = {art.makespan:.6f}"
       f"  (paper's hand schedule: 781/653 * 3/4 = {781 / 653 * 0.75:.6f})")
 
-# the same solve, stated as a request against any registered backend
 print(f"registered solver backends: {available_backends()}")
-report = get_backend("simplex").solve(SolveRequest(instance=inst))
-print(f"simplex backend agrees: makespan = {report.makespan:.6f} "
-      f"(status={report.status})")
-# the fused-kernel engine — what `launch/serve.py --plan-backend pallas`
-# serves with; parity with every other backend is fuzz-tested at <= 1e-9
-report_pl = get_backend("pallas").solve(SolveRequest(instance=inst))
-print(f"pallas backend agrees:  makespan = {report_pl.makespan:.6f} "
-      f"(backend={report_pl.backend}, status={report_pl.status})")
+for backend in ("simplex", "pallas"):
+    a = session.solve(paper, Policy(installments=2, backend=backend))
+    print(f"{backend:>8} backend agrees: makespan = {a.makespan:.6f} "
+          f"(served by {a.backend}, status={a.status})")
 for name, fn in [("SIMPLE", simple), ("SINGLEINST", single_inst),
                  ("MULTIINST", lambda i: multi_inst(i, cap=300))]:
     r = fn(example_instance(0.75))
     print(f"{name:>10}: makespan = {r.makespan:.6f}"
           + ("  (FAILED)" if r.failed else ""))
 print("gamma (fraction of each load per processor per installment):")
-print(np.array_str(lp.schedule.gamma, precision=4, suppress_small=True))
+print(np.array_str(art.gamma, precision=4, suppress_small=True))
 
-# ------------------------------------------------------------------------- 4
-print("\n=== the same registry on a star platform with result return ===")
-from repro.core import Instance, Loads, Star, star_single_load_makespan
-
+# ------------------------------------------------------------------- 2
+print("\n=== a star platform with result return + the shippable artifact ===")
 # a one-port master + 3 heterogeneous workers on a uniform-speed bus;
 # return_ratio=0.25 makes every computed fraction ship a quarter of its
 # input volume back to the master before the load counts as done
-star = Star(w=[0.8, 1.2, 0.6, 1.5], z=[0.3, 0.3, 0.3])
-star_inst = Instance(star, Loads(v_comm=[1.0], v_comp=[1.0]), q=1)
-star_lp = get_backend("batched").solve(SolveRequest(instance=star_inst))
-cf = star_single_load_makespan(star.w, star.z, 1.0, 1.0)
-print(f"star (bus) single load: LP makespan = {star_lp.makespan:.6f}, "
+star = Problem(topology="star", w=[0.8, 1.2, 0.6, 1.5], z=0.3,
+               v_comm=[1.0], v_comp=[1.0])
+star_art = session.solve(star, Policy(backend="batched"))
+cf = star_single_load_makespan(np.array(star.w), np.array(star.z), 1.0, 1.0)
+print(f"star (bus) single load: LP makespan = {star_art.makespan:.6f}, "
       f"closed form = {cf:.6f} (equal on uniform links)")
-ret_inst = Instance(star, Loads(v_comm=[1.0], v_comp=[1.0], return_ratio=0.25), q=1)
-ret_lp = get_backend("batched").solve(SolveRequest(instance=ret_inst))
-print(f"with result return (ratio 0.25): makespan = {ret_lp.makespan:.6f} "
-      f"(last return arrives at {float(ret_lp.schedule.ret_end.max()):.6f})")
+ret = Problem(topology="star", w=[0.8, 1.2, 0.6, 1.5], z=0.3,
+              v_comm=[1.0], v_comp=[1.0], return_ratio=0.25)
+ret_art = session.solve(ret, Policy(backend="batched"))
+print(f"with result return (ratio 0.25): makespan = {ret_art.makespan:.6f} "
+      f"(last return arrives at {float(ret_art.schedule().ret_end.max()):.6f})")
 
-# ------------------------------------------------------------------------- 5
+# the artifact is the wire format: JSON out, JSON in, replay — bit-identical
+wire = ret_art.to_json()
+shipped = PlanArtifact.from_json(wire)
+assert shipped.to_json() == wire, "artifact round-trip must be bit-identical"
+print(f"artifact v{shipped.version}: {len(wire)} JSON bytes, "
+      f"replayed makespan = {shipped.schedule().makespan:.6f}, "
+      f"provenance: backend={shipped.backend}, cache_hit={shipped.cache_hit}")
+
+# ------------------------------------------------------------------- 3
+print("\n=== serving-style traffic: coalescing async submission ===")
+rng = np.random.default_rng(0)
+from repro.core.instance import random_instance
+bursty = Session(policy=Policy(backend="batched"), max_batch=8)
+tickets = [bursty.submit(Problem.from_instance(
+    random_instance(rng, m=3, n_loads=2, q=1))) for _ in range(20)]
+makespans = [t.result().makespan for t in tickets]
+st = bursty.stats()
+print(f"20 staggered submits -> {st['flushes']} engine flushes "
+      f"(max_batch=8); mean makespan {np.mean(makespans):.3f}s")
+
+# ------------------------------------------------------------------- 4
 print("\n=== the same LP scheduling real training batches on a chain ===")
 cfg = smoke_variant(get_arch("llama3.2-3b"))
 policy = ShardingPolicy(attn_chunk=16)
@@ -85,10 +125,9 @@ speed = load.flops_per_sample * B / 0.04
 stages = [StageSpec("pod0", speed), StageSpec("pod1", speed / 2),
           StageSpec("pod2", speed / 3)]
 links = [LinkSpec(bytes_per_sec=load.bytes_per_sample * B / 0.01, startup_sec=1e-4)] * 2
-planner = Planner(stages, links)
-# let the cost-aware Theorem-1 sweep pick the installment count: each
-# installment is charged a fixed overhead (launch/bookkeeping), so unlike
-# the pure linear model the optimum T* is finite
+planner = Planner(stages, links, session=session)
+# the cost-aware Theorem-1 chooser, stated declaratively: each installment
+# is charged a fixed overhead, so unlike the pure linear model T* is finite
 auto = planner.plan_auto_T([load, load], t_max=4, installment_cost=2e-4,
                            backend="serial")
 print("auto-T sweep (0.2ms/installment): "
@@ -97,7 +136,8 @@ print("auto-T sweep (0.2ms/installment): "
       + f" -> T* = {auto.t_star}")
 plan = auto.plan
 print(f"planned makespan: {plan.makespan * 1e3:.2f} ms "
-      f"(T* = {auto.t_star} installments/load)")
+      f"(T* = {auto.t_star} installments/load, artifact "
+      f"t_star = {plan.artifact.t_star})")
 for t, (n, j) in enumerate(plan.cells):
     print(f"  load {n}, installment {j}: samples/stage = "
           f"{[int(x) for x in plan.samples[t]]}")

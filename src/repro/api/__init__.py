@@ -1,0 +1,49 @@
+"""repro.api — the one front door.
+
+Declarative specs + a session that owns the serving state:
+
+* :class:`Problem` — the full scheduling instance (topology, platform
+  arrays, loads with release dates and return ratios), frozen and hashable;
+* :class:`Policy` — how to solve it (installments fixed or auto-T*,
+  backend, objective, cache quantum, fallback rules), frozen and hashable;
+* :class:`Session` — ``solve`` / ``solve_bulk`` / async ``submit`` with
+  coalescing micro-batch flushing, owning the backend handles and the
+  solution cache;
+* :class:`PlanTicket` — the future-style handle ``submit`` returns;
+* :class:`PlanArtifact` — the versioned, JSON-round-trippable result
+  (schedule decision + makespan + provenance).
+
+The historical entry points (``Planner.plan*``, ``PlanService``,
+``ChainReplanner``, ``serve --plan``) are thin shims over a Session; new
+code should state a (Problem, Policy) pair and call the session directly —
+see DESIGN.md §7 and examples/quickstart.py for the migration table.
+"""
+
+from .artifact import ARTIFACT_VERSION, PlanArtifact
+from .session import PlanTicket, Session
+from .spec import Policy, Problem
+
+__all__ = [
+    "Problem",
+    "Policy",
+    "Session",
+    "PlanTicket",
+    "PlanArtifact",
+    "ARTIFACT_VERSION",
+    "default_session",
+]
+
+_DEFAULT: Session | None = None
+
+
+def default_session() -> Session:
+    """The shared process-wide session (lazily created).
+
+    Used by the compatibility shims when the caller did not wire a session
+    of their own; sharing it means shim traffic coalesces into the same
+    cache and backend handles instead of fragmenting per call site.
+    """
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Session()
+    return _DEFAULT

@@ -1,0 +1,240 @@
+"""Versioned, JSON-round-trippable plan artifacts.
+
+A :class:`PlanArtifact` is what every :class:`repro.api.Session` solve
+returns: the *decision* (the gamma fractions and the installment tuple
+actually solved), the certified objective values, and full provenance —
+which backend actually served the request, whether the solution replayed
+from the cache, any fallback/degradation events, and the solver's size
+stats.  It deliberately does NOT store the schedule's event times: the ASAP
+replay is deterministic and exact (a repo-wide invariant, property-tested),
+so ``artifact.schedule()`` re-materializes the identical executable
+schedule in any process from the gamma alone.
+
+Versioning rules (DESIGN.md §7):
+
+* ``ARTIFACT_VERSION`` bumps whenever a field is added, removed, renamed,
+  or its meaning changes; ``from_json`` refuses versions it does not know
+  (never a best-effort parse of a future schema).
+* ``to_json`` is canonical — sorted keys, fixed separators, floats via
+  ``repr`` (exact round-trip for every finite float64 and for NaN) — so
+  ``from_json(s).to_json() == s`` bit-identically, across processes and
+  platforms.  Ship it, diff it, replay it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from .spec import Policy, Problem
+
+__all__ = ["ARTIFACT_VERSION", "PlanArtifact"]
+
+ARTIFACT_VERSION = 1
+
+
+@dataclasses.dataclass
+class PlanArtifact:
+    """One solved plan + its provenance.  See module docstring."""
+
+    problem: Problem
+    policy: Policy
+    q: tuple  # installment tuple actually solved (auto-T: the winning rung)
+    gamma: np.ndarray  # [m, T] fractions (NaN on a failed solve)
+    makespan: float  # replayed (executable) makespan
+    lp_makespan: float  # the LP objective at the optimum
+    objective_value: float  # value of the policy's objective
+    status: str  # "optimal" | "infeasible" | "failed" | ...
+    backend: str  # label that actually served it (e.g. "batched+cache")
+    cache_hit: bool
+    fallback_events: tuple  # e.g. ("served_by:simplex",) — empty when none
+    n_vars: int
+    n_rows: int
+    sweep: dict | None = None  # auto-T provenance: qs/makespans/costs/t_star_index
+    version: int = ARTIFACT_VERSION
+    # live-solve conveniences, never serialized: the underlying SolveReport
+    # (carries the already-replayed Schedule) and the per-rung sweep reports
+    report: object = dataclasses.field(default=None, repr=False, compare=False)
+    sweep_reports: tuple = dataclasses.field(default=(), repr=False, compare=False)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "optimal"
+
+    @property
+    def t_star(self) -> int | None:
+        """The winning uniform rung of an auto-T sweep (None on fixed plans)."""
+        if self.sweep is None:
+            return None
+        return int(self.sweep["qs"][self.sweep["t_star_index"]][0])
+
+    # ---------------- replay ----------------
+
+    def instance(self):
+        """The solver-facing instance this plan schedules."""
+        return self.problem.to_instance(self.q)
+
+    def schedule(self):
+        """Re-materialize the executable schedule by exact ASAP replay.
+
+        Prefers the live report's already-replayed schedule; a deserialized
+        artifact replays from scratch — bit-identical by the replay
+        invariant.  Raises on failed solves (there is nothing to replay).
+        """
+        if not self.ok:
+            raise ValueError(f"cannot replay a {self.status!r} artifact")
+        if self.report is not None:
+            return self.report.schedule
+        from repro.core.simulator import simulate
+
+        return simulate(self.instance(), self.gamma)
+
+    # ---------------- diffing ----------------
+
+    def diff(self, other: "PlanArtifact", tol: float = 0.0) -> dict:
+        """Field-level differences between two artifacts (empty == same plan).
+
+        Compares the decision and outcome fields; ``tol`` is an absolute
+        tolerance on the float fields and on the gamma entries (0 = exact).
+        """
+        out: dict = {}
+        if self.problem != other.problem:
+            out["problem"] = (self.problem, other.problem)
+        if self.q != other.q:
+            out["q"] = (self.q, other.q)
+        if self.status != other.status:
+            out["status"] = (self.status, other.status)
+        if self.gamma.shape != other.gamma.shape:
+            out["gamma"] = (self.gamma.shape, other.gamma.shape)
+        else:
+            with np.errstate(invalid="ignore"):
+                d = np.abs(self.gamma - other.gamma)
+            if not (np.nan_to_num(d) <= tol).all():
+                out["gamma"] = float(np.nanmax(d))
+        for f in ("makespan", "lp_makespan", "objective_value"):
+            a, b = getattr(self, f), getattr(other, f)
+            same = (a == b) or (np.isnan(a) and np.isnan(b)) or (
+                np.isfinite(a) and np.isfinite(b) and abs(a - b) <= tol
+            )
+            if not same:
+                out[f] = (a, b)
+        return out
+
+    # ---------------- serialization ----------------
+
+    def to_dict(self) -> dict:
+        p = self.problem
+        return {
+            "version": self.version,
+            "problem": {
+                "topology": p.topology,
+                "w": list(p.w),
+                "z": list(p.z),
+                "tau": list(p.tau),
+                "latency": list(p.latency),
+                "v_comm": list(p.v_comm),
+                "v_comp": list(p.v_comp),
+                "release": list(p.release),
+                "return_ratio": list(p.return_ratio),
+                "w_per_load": [list(r) for r in p.w_per_load]
+                if p.w_per_load is not None
+                else None,
+            },
+            "policy": {
+                "installments": list(self.policy.installments),
+                "auto_t": self.policy.auto_t,
+                "t_max": self.policy.t_max,
+                "t_candidates": list(self.policy.t_candidates)
+                if self.policy.t_candidates is not None
+                else None,
+                "installment_cost": self.policy.installment_cost,
+                "backend": self.policy.backend,
+                "objective": self.policy.objective,
+                "weights": list(self.policy.weights)
+                if self.policy.weights is not None
+                else None,
+                "beta": self.policy.beta,
+                "cross_check": self.policy.cross_check,
+                "validate": self.policy.validate,
+                "fallback": self.policy.fallback,
+                "cache_quantum": self.policy.cache_quantum,
+            },
+            "q": list(self.q),
+            "gamma": [[float(v) for v in row] for row in np.asarray(self.gamma)],
+            "makespan": float(self.makespan),
+            "lp_makespan": float(self.lp_makespan),
+            "objective_value": float(self.objective_value),
+            "status": self.status,
+            "backend": self.backend,
+            "cache_hit": self.cache_hit,
+            "fallback_events": list(self.fallback_events),
+            "n_vars": self.n_vars,
+            "n_rows": self.n_rows,
+            "sweep": self.sweep,
+        }
+
+    def to_json(self) -> str:
+        """Canonical JSON: sorted keys, fixed separators, repr floats."""
+        return json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"),
+                          allow_nan=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanArtifact":
+        version = d.get("version")
+        if version != ARTIFACT_VERSION:
+            raise ValueError(
+                f"unknown PlanArtifact version {version!r} "
+                f"(this build reads version {ARTIFACT_VERSION})"
+            )
+        pd = d["problem"]
+        problem = Problem(
+            w=pd["w"],
+            z=pd["z"],
+            v_comm=pd["v_comm"],
+            v_comp=pd["v_comp"],
+            topology=pd["topology"],
+            tau=pd["tau"],
+            latency=pd["latency"],
+            release=pd["release"],
+            return_ratio=pd["return_ratio"],
+            w_per_load=pd["w_per_load"],
+        )
+        pl = d["policy"]
+        policy = Policy(
+            installments=pl["installments"],
+            auto_t=pl["auto_t"],
+            t_max=pl["t_max"],
+            t_candidates=pl["t_candidates"],
+            installment_cost=pl["installment_cost"],
+            backend=pl["backend"],
+            objective=pl["objective"],
+            weights=pl["weights"],
+            beta=pl["beta"],
+            cross_check=pl["cross_check"],
+            validate=pl["validate"],
+            fallback=pl["fallback"],
+            cache_quantum=pl["cache_quantum"],
+        )
+        return cls(
+            problem=problem,
+            policy=policy,
+            q=tuple(int(x) for x in d["q"]),
+            gamma=np.asarray(d["gamma"], dtype=np.float64),
+            makespan=float(d["makespan"]),
+            lp_makespan=float(d["lp_makespan"]),
+            objective_value=float(d["objective_value"]),
+            status=d["status"],
+            backend=d["backend"],
+            cache_hit=bool(d["cache_hit"]),
+            fallback_events=tuple(d["fallback_events"]),
+            n_vars=int(d["n_vars"]),
+            n_rows=int(d["n_rows"]),
+            sweep=d["sweep"],
+            version=int(version),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "PlanArtifact":
+        return cls.from_dict(json.loads(s))

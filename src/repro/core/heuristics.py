@@ -441,15 +441,18 @@ def adversary_sweep(
     instances: list,
     strategies: dict | None = None,
     simulator: str = "batched",
+    session=None,
 ) -> dict:
     """Evaluate every heuristic over a population of instances at once.
 
     The heuristics *construct* their fraction assignments serially (each is a
     chain of tiny per-load LPs), but the achieved makespans — the §6 campaign
     statistic — are measured in bulk: with ``simulator="batched"`` all
-    (instance, gamma) pairs of a strategy go through the vmapped ASAP
-    simulator (repro.engine) in a handful of fixed-shape batches instead of
-    one NumPy replay per instance.
+    (instance, gamma) pairs of a strategy are replayed through the session
+    front door (``Session.evaluate_gammas`` — the vmapped ASAP simulator) in
+    a handful of fixed-shape batches instead of one NumPy replay per
+    instance.  ``session`` is an optional :class:`repro.api.Session` to
+    share; the process-wide default is used otherwise.
 
     Returns ``{strategy: np.ndarray of makespans}`` (inf where the strategy
     failed — including star/return-phase instances, which every chain
@@ -463,15 +466,19 @@ def adversary_sweep(
         except ValueError as e:  # chain-only guard: record, don't abort the sweep
             return HeuristicResult(name, None, None, None, True, str(e))
 
+    sess = None
+    if simulator == "batched":
+        from repro.api import default_session  # deferred: keeps core jax-free
+
+        sess = session if session is not None else default_session()
+
     out = {}
     for name, fn in strategies.items():
         results = [run(name, fn, inst) for inst in instances]
         mks = np.full(len(instances), np.inf)
         ok = [i for i, r in enumerate(results) if not r.failed]
-        if ok and simulator == "batched":
-            from repro.engine.batched_sim import makespans  # deferred: jax
-
-            mks[ok] = makespans(
+        if ok and sess is not None:
+            mks[ok] = sess.evaluate_gammas(
                 [results[i].instance for i in ok], [results[i].gamma for i in ok]
             )
         elif ok:

@@ -1,0 +1,86 @@
+"""Canonical key derivation for scheduling instances — THE one place.
+
+Every layer that groups, caches, or deduplicates instances derives its key
+here, so the notions of "same problem" can never drift apart:
+
+* :func:`instance_content_key` — the quantized content hash used by the
+  engine solution cache (:mod:`repro.engine.cache`) and by
+  ``repro.api.Problem.key()``: two instances with indistinguishable
+  (to ``quantum`` relative precision) parameter arrays, the same topology,
+  installment counts, and objective hash identically and therefore share a
+  cache slot.
+* :func:`instance_bucket_key` — the structural key used by the engine arena
+  (:mod:`repro.engine.arena`) to pack instances into fixed-shape batches:
+  instances sharing ``(topology, has_returns, m, T, q)`` have identical
+  recurrence *and* LP shapes, so they batch with no padding.
+
+Identical content keys imply identical bucket keys (the bucket key is a
+function of fields the content key also hashes), which is what makes
+"same ``Problem.key()`` => same arena bucket and same cache slot" a
+theorem rather than a convention (tested in tests/test_api_spec.py).
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from .instance import Instance
+
+__all__ = ["quantize", "instance_content_key", "instance_bucket_key"]
+
+
+def quantize(a: np.ndarray, quantum: float) -> np.ndarray:
+    """Relative quantization: keep ~|log10 quantum| significant digits."""
+    a = np.asarray(a, dtype=np.float64)
+    if a.size == 0:
+        return a
+    scale = np.maximum(np.abs(a), 1e-300)
+    mag = 10.0 ** np.floor(np.log10(scale))
+    return np.round(a / (mag * quantum)) * (mag * quantum)
+
+
+def instance_content_key(
+    inst: Instance, objective: str = "makespan", quantum: float = 1e-9
+) -> str:
+    """Stable content hash of a quantized instance (+ objective).
+
+    The topology tag is part of the key — a chain and a star with identical
+    parameter arrays are different scheduling problems — and so are the
+    per-load return ratios (they change the LP's variable blocks).
+    """
+    h = hashlib.sha256()
+    h.update(
+        f"{objective}|topo={inst.topology}|m={inst.m}|N={inst.N}|q={inst.q}".encode()
+    )
+    for arr in (
+        inst.platform.w,
+        inst.platform.z,
+        inst.platform.tau,
+        inst.platform.latency,
+        inst.loads.v_comm,
+        inst.loads.v_comp,
+        inst.loads.release,
+        inst.loads.return_ratio,
+        inst.w_per_load if inst.w_per_load is not None else np.zeros(0),
+    ):
+        h.update(quantize(arr, quantum).tobytes())
+    return h.hexdigest()
+
+
+def instance_bucket_key(inst: Instance) -> tuple:
+    """Structural key ``(topology, has_returns, m, T, q)`` for arena packing.
+
+    Instances sharing this key have identical LP row patterns and ASAP
+    recurrence shapes (the completeness rows depend on the cell -> load map,
+    which the ``q`` tuple fixes; the precedence-row pattern depends on the
+    topology and on whether the result-return phase is active).
+    """
+    return (
+        inst.topology,
+        inst.has_returns,
+        inst.m,
+        inst.total_installments,
+        tuple(inst.q),
+    )

@@ -23,8 +23,8 @@ import dataclasses
 
 import numpy as np
 
-from .backends import SolveRequest, get_backend
-from .instance import Chain, Instance, Loads, Star
+from .backends import get_backend
+from .instance import Instance
 from .solver import LPResult
 
 __all__ = [
@@ -79,6 +79,9 @@ class DLTPlan:
     samples: list
     cells: list  # (load index, installment index)
     makespan: float
+    # the versioned repro.api.PlanArtifact behind this plan (ship/diff/replay);
+    # None only for plans built outside the Session path
+    artifact: object = None
 
     def stage_rounds(self, stage: int) -> list:
         """[(load, installment, n_samples)] for one stage, in execution order."""
@@ -137,7 +140,7 @@ class Planner:
     """
 
     def __init__(self, stages: list, links: list, ewma: float = 0.5, cache=None,
-                 topology: str = "chain"):
+                 topology: str = "chain", session=None):
         if len(links) != max(len(stages) - 1, 0):
             raise ValueError("need exactly len(stages)-1 links")
         if topology not in ("chain", "star"):
@@ -146,19 +149,59 @@ class Planner:
         self.links = list(links)
         self.ewma = ewma
         self.topology = topology
-        # engine solution cache (repro.engine.cache.SolutionCache); shared
-        # across replans so identical platform states replay instead of solve
-        self._cache = cache
+        # the repro.api.Session every plan routes through; created lazily so
+        # constructing a Planner stays import-light.  ``cache`` seeds the
+        # session's solution cache (shared across replans so identical
+        # platform states replay instead of solve).
+        if session is not None and cache is not None:
+            raise ValueError(
+                "pass either cache= or session= (a session owns its cache); "
+                "to reuse a warm cache with a shared session, set "
+                "session.cache = cache first"
+            )
+        self._session = session
+        self._cache0 = cache if session is None else None
+
+    # ---------------- the session front door ----------------
+
+    @property
+    def session(self):
+        """The :class:`repro.api.Session` this planner solves through."""
+        if self._session is None:
+            from repro.api import Session
+
+            self._session = Session(cache=self._cache0)
+            self._cache0 = None
+        return self._session
+
+    @property
+    def _cache(self):
+        """Historical alias: the session's solution cache (may be None)."""
+        if self._session is not None:
+            return self._session._cache
+        return self._cache0
+
+    @_cache.setter
+    def _cache(self, value) -> None:
+        if self._session is not None:
+            self._session.cache = value
+        else:
+            self._cache0 = value
+
+    def _policy(self, q, backend, **kw):
+        """(Policy, backend-instance-override) for one legacy call."""
+        from repro.api import Policy
+
+        if isinstance(backend, str):
+            return Policy(installments=q, backend=backend, **kw), None
+        return Policy(installments=q, **kw), backend
 
     # ---------------- instance construction ----------------
 
-    def to_instance(self, batches: list, q: int | list = 1) -> Instance:
-        w = np.array([1.0 / s.flops_per_sec for s in self.stages])
-        z = np.array([1.0 / l.bytes_per_sec for l in self.links])
-        lat = np.array([l.startup_sec for l in self.links])
-        tau = np.array([s.available_at for s in self.stages])
-        platform_cls = Star if self.topology == "star" else Chain
-        platform = platform_cls(w=w, z=z, tau=tau, latency=lat)
+    def to_problem(self, batches: list):
+        """Map stages/links/batches onto a declarative :class:`repro.api.Problem`."""
+        from repro.api import Problem
+
         for b in batches:
             if b.return_bytes_per_sample > 0 and b.bytes_per_sample <= 0:
                 raise ValueError(
@@ -167,7 +210,12 @@ class Planner:
                     "ratio of the forward volume, so a zero-byte forward "
                     "load cannot express its return traffic"
                 )
-        loads = Loads(
+        return Problem(
+            topology=self.topology,
+            w=[1.0 / s.flops_per_sec for s in self.stages],
+            z=[1.0 / l.bytes_per_sec for l in self.links],
+            tau=[s.available_at for s in self.stages],
+            latency=[l.startup_sec for l in self.links],
             v_comm=[b.num_samples * b.bytes_per_sample for b in batches],
             v_comp=[b.num_samples * b.flops_per_sample for b in batches],
             release=[b.release_at for b in batches],
@@ -177,7 +225,9 @@ class Planner:
                 for b in batches
             ],
         )
-        return Instance(platform, loads, q=q)
+
+    def to_instance(self, batches: list, q: int | list = 1) -> Instance:
+        return self.to_problem(batches).to_instance(q)
 
     # ---------------- planning ----------------
 
@@ -189,13 +239,13 @@ class Planner:
     def plan(self, batches: list, q: int | list = 1, backend="auto") -> DLTPlan:
         """Solve one plan.  ``backend`` is a registry name or a
         :class:`SolverBackend`; ``"batched"`` routes through the engine
-        (repro.engine) — replans with an attached :class:`PlanService`-style
-        cache hit the solution cache instead of the LP."""
-        inst = self.to_instance(batches, q=q)
-        res = self.solver(backend).solve(SolveRequest(instance=inst))
-        if not res.ok:
-            raise RuntimeError(f"DLT LP failed: {res.status}")
-        return self._plan_from_result(inst, res, batches)
+        (repro.engine) — replans through the session's solution cache hit
+        it instead of the LP.  Shim over ``session.solve``."""
+        policy, override = self._policy(q, backend)
+        art = self.session.solve(self.to_problem(batches), policy, backend=override)
+        if not art.ok:
+            raise RuntimeError(f"DLT LP failed: {art.status}")
+        return self._plan_from_artifact(art, batches)
 
     def plan_bulk(
         self, scenarios: list, q: int | list = 1, backend="batched"
@@ -205,17 +255,17 @@ class Planner:
         ``scenarios`` is a list of batch-lists (e.g. one per straggler /
         failure hypothesis over the *same* chain); all the instances are
         solved in fixed-shape batches by the engine and integerized back
-        into :class:`DLTPlan`s.
+        into :class:`DLTPlan`s.  Shim over ``session.solve_bulk``.
         """
-        insts = [self.to_instance(b, q=q) for b in scenarios]
-        results = self.solver(backend).solve_many(
-            [SolveRequest(instance=inst) for inst in insts]
+        policy, override = self._policy(q, backend)
+        arts = self.session.solve_bulk(
+            [self.to_problem(b) for b in scenarios], policy, backend=override
         )
         plans = []
-        for inst, res, batches in zip(insts, results, scenarios):
-            if not res.ok:
-                raise RuntimeError(f"DLT LP failed: {res.status}")
-            plans.append(self._plan_from_result(inst, res, batches))
+        for art, batches in zip(arts, scenarios):
+            if not art.ok:
+                raise RuntimeError(f"DLT LP failed: {art.status}")
+            plans.append(self._plan_from_artifact(art, batches))
         return plans
 
     def plan_auto_T(
@@ -243,37 +293,47 @@ class Planner:
 
         Ties break toward fewer installments (within 1e-12 relative).
         """
-        qs = list(qs) if qs is not None else list(range(1, t_max + 1))
-        if not qs:
+        qs = list(qs) if qs is not None else None  # materialize once: qs may be a generator
+        if qs is not None and not qs:
             raise ValueError("need at least one candidate installment count")
-        insts = [self.to_instance(batches, q=q) for q in qs]
-        reports = self.solver(backend).solve_many(
-            [SolveRequest(instance=inst) for inst in insts]
+        policy, override = self._policy(
+            1, backend,
+            auto_t=True, t_max=t_max,
+            t_candidates=tuple(qs) if qs is not None else None,
+            installment_cost=installment_cost,
         )
+        art = self.session.solve(self.to_problem(batches), policy, backend=override)
+        if not art.ok:
+            # sweep provenance is absent when every rung failed — report the
+            # actual swept ladder, one status per rung
+            ladder = list(policy.t_candidates or range(1, policy.t_max + 1))
+            raise RuntimeError(
+                f"auto-T sweep failed for every q in {ladder}: "
+                f"{[r.status for r in art.sweep_reports]}"
+            )
         makespans: dict[int, float] = {}
         costs: dict[int, float] = {}
-        for q, inst, rep in zip(qs, insts, reports):
-            if not rep.ok:
-                continue
-            makespans[q] = rep.makespan
-            costs[q] = rep.makespan + installment_cost * inst.total_installments
-        if not costs:
-            raise RuntimeError(
-                f"auto-T sweep failed for every q in {qs}: "
-                f"{[r.status for r in reports]}"
-            )
-        best = min(costs.values())
-        t_star = min(q for q, cst in costs.items() if cst <= best * (1 + 1e-12) + 1e-12)
-        k = qs.index(t_star)
-        plan = self._plan_from_result(insts[k], reports[k], batches)
+        for qt, mk, cst in zip(
+            art.sweep["qs"], art.sweep["makespans"], art.sweep["costs"]
+        ):
+            if mk is not None:
+                makespans[int(qt[0])] = mk
+                costs[int(qt[0])] = cst
         return AutoTResult(
-            plan=plan,
-            t_star=t_star,
+            plan=self._plan_from_artifact(art, batches),
+            t_star=art.t_star,
             installment_cost=installment_cost,
             makespans=makespans,
             costs=costs,
-            reports=reports,
+            reports=list(art.sweep_reports),
         )
+
+    def _plan_from_artifact(self, art, batches: list) -> DLTPlan:
+        plan = self._plan_from_result(
+            art.report.schedule.instance, art.report, batches
+        )
+        plan.artifact = art
+        return plan
 
     def _plan_from_result(self, inst: Instance, res: LPResult, batches: list) -> DLTPlan:
         cells = list(inst.cells())
@@ -330,8 +390,11 @@ class Planner:
         stages = [
             dataclasses.replace(s, available_at=max(s.available_at, restore_delay)) for s in stages
         ]
-        p2 = Planner(stages, links, ewma=self.ewma, cache=self._cache,
-                     topology=self.topology)
+        # the new planner shares this one's session (and with it the solution
+        # cache and backend handles) — a platform change is not a state reset
+        p2 = Planner(stages, links, ewma=self.ewma,
+                     cache=None if self._session is not None else self._cache0,
+                     topology=self.topology, session=self._session)
         return p2, p2.plan(batches, q=q, backend=backend)
 
     def observe_step_time(self, stage: int, achieved_flops_per_sec: float) -> bool:

@@ -70,7 +70,19 @@ def solve_batch(
     Returns a list of :class:`SolveReport` in caller order.  ``cache`` may be
     a :class:`repro.engine.cache.SolutionCache` to reuse solutions across
     calls (batched backend only).
+
+    .. deprecated:: PR 5
+       Use ``repro.api.Session.solve_bulk`` — it returns versioned
+       :class:`PlanArtifact`\\ s and owns the cache for you.
     """
+    import warnings
+
+    warnings.warn(
+        "solve_batch is deprecated: use repro.api.Session.solve_bulk "
+        "(one session owns the cache and returns PlanArtifacts)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     reqs = [SolveRequest(instance=inst, objective=objective) for inst in instances]
     return get_backend(backend, cache=cache).solve_many(reqs)
 

@@ -35,6 +35,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.instance import Instance
+from repro.core.keys import instance_bucket_key
 
 __all__ = ["PackedBucket", "InstanceArena", "pack_instances"]
 
@@ -147,9 +148,9 @@ def pack_instances(instances: list, pad_shapes: bool = False) -> list:
     """
     groups: dict[tuple, list] = {}
     for idx, inst in enumerate(instances):
-        key = (inst.topology, inst.has_returns, inst.m,
-               inst.total_installments, tuple(inst.q))
-        groups.setdefault(key, []).append(idx)
+        # the one canonical structural key (repro.core.keys): identical
+        # Problem.key() => identical bucket here, by construction
+        groups.setdefault(instance_bucket_key(inst), []).append(idx)
 
     buckets = []
     for key in sorted(groups):

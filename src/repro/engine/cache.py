@@ -11,49 +11,23 @@ and cheap, so a hit returns the same executable schedule the solver would.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 
 import numpy as np
 
 from repro.core.instance import Instance
+from repro.core.keys import instance_content_key
 
 __all__ = ["instance_key", "CachedSolution", "SolutionCache"]
-
-
-def _quantize(a: np.ndarray, quantum: float) -> np.ndarray:
-    """Relative quantization: keep ~|log10 quantum| significant digits."""
-    a = np.asarray(a, dtype=np.float64)
-    if a.size == 0:
-        return a
-    scale = np.maximum(np.abs(a), 1e-300)
-    mag = 10.0 ** np.floor(np.log10(scale))
-    return np.round(a / (mag * quantum)) * (mag * quantum)
 
 
 def instance_key(inst: Instance, objective: str = "makespan", quantum: float = 1e-9) -> str:
     """Stable content hash of a quantized instance (+ objective).
 
-    The topology tag is part of the key — a chain and a star with identical
-    parameter arrays are different scheduling problems — and so are the
-    per-load return ratios (they change the LP's variable blocks).
+    The derivation lives in :func:`repro.core.keys.instance_content_key` —
+    the same one ``repro.api.Problem.key()`` uses, so a Problem's key IS its
+    cache slot.  Kept under the historical name for the engine call sites.
     """
-    h = hashlib.sha256()
-    h.update(
-        f"{objective}|topo={inst.topology}|m={inst.m}|N={inst.N}|q={inst.q}".encode()
-    )
-    for arr in (
-        inst.platform.w,
-        inst.platform.z,
-        inst.platform.tau,
-        inst.platform.latency,
-        inst.loads.v_comm,
-        inst.loads.v_comp,
-        inst.loads.release,
-        inst.loads.return_ratio,
-        inst.w_per_load if inst.w_per_load is not None else np.zeros(0),
-    ):
-        h.update(_quantize(arr, quantum).tobytes())
-    return h.hexdigest()
+    return instance_content_key(inst, objective=objective, quantum=quantum)
 
 
 @dataclasses.dataclass

@@ -241,11 +241,18 @@ class _Ticket:
 class PlanService:
     """Batching request front-end over the batched backend.
 
-    Call sites ``submit`` work as it arrives — either a bare
-    :class:`Instance` (solved under the service's default objective) or a
-    full :class:`SolveRequest` — and ``flush`` once per scheduling tick; the
-    service coalesces everything submitted since the last flush into one
-    bulk solve (cache-first).
+    .. deprecated:: PR 5
+       A thin shim over :class:`repro.api.Session` — the one front door
+       that also coalesces by bucket size and deadline and returns
+       versioned :class:`repro.api.PlanArtifact`\\ s.  New code should use a
+       Session directly; this class keeps the historical submit/flush/
+       result surface (reports, integer tickets, bounded retention) alive.
+
+    Ticket lifecycle (the enforced semantics, regression-tested in
+    tests/test_api_session.py): ``result()`` on a not-yet-flushed ticket
+    auto-flushes first; ``flush()`` with an empty queue is an idempotent
+    no-op; tickets older than the ``max_results`` retention window raise
+    ``KeyError`` loudly instead of returning stale reports.
     """
 
     def __init__(
@@ -255,36 +262,67 @@ class PlanService:
         max_results: int = 65536,
         backend: str = "batched",
     ):
-        self.cache = cache if cache is not None else SolutionCache()
-        self.objective = objective
-        self.max_results = max_results
-        # the service always fronts an engine bulk backend; "pallas" swaps
-        # the hot loops for the fused kernels (same certification contract)
-        if backend == "pallas":
-            self.backend: BatchedBackend = PallasBackend(cache=self.cache)
-        elif backend == "batched":
-            self.backend = BatchedBackend(cache=self.cache)
-        else:
+        import warnings
+
+        warnings.warn(
+            "PlanService is deprecated: use repro.api.Session (submit/flush "
+            "with coalescing, PlanArtifact results) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if backend not in ("batched", "pallas"):
             raise ValueError(
                 f"PlanService fronts the engine backends ('batched', 'pallas'); got {backend!r}"
             )
-        self._queue: list[SolveRequest] = []
+        from repro.api import Policy, Session
+
+        # explicit-flush semantics: the session never flushes on queue size
+        self._session = Session(
+            policy=Policy(backend=backend, objective=objective),
+            cache=cache if cache is not None else SolutionCache(),
+            max_batch=None,
+        )
+        self.objective = objective
+        self.max_results = max_results
+        self.backend = self._session.backend(backend)
+        self._pending: list = []  # PlanTickets submitted since the last flush
         self._results: list = []
         self._base = 0  # absolute ticket index of _results[0]
 
+    @property
+    def cache(self) -> SolutionCache:
+        return self._session.cache
+
+    @property
+    def session(self):
+        """The underlying :class:`repro.api.Session` (migration escape hatch)."""
+        return self._session
+
     def submit(self, work) -> _Ticket:
         """Queue an :class:`Instance` or a :class:`SolveRequest`; returns a ticket."""
-        if not isinstance(work, SolveRequest):
-            work = SolveRequest(instance=work, objective=self.objective)
-        self._queue.append(work)
-        return _Ticket(index=self._base + len(self._results) + len(self._queue) - 1)
+        self._pending.append(self._session.submit(work))
+        return _Ticket(index=self._base + len(self._results) + len(self._pending) - 1)
 
     def flush(self) -> list:
-        """Solve everything queued; returns the new reports (queue order)."""
-        if not self._queue:
+        """Solve everything queued; returns the new reports (queue order).
+
+        Idempotent: flushing an empty queue is a no-op returning ``[]``.
+        """
+        if not self._pending:
             return []
-        batch, self._queue = self._queue, []
-        res = self.backend.solve_many(batch)
+        batch, self._pending = self._pending, []
+        try:
+            self._session.flush()
+            res = [t.report() for t in batch]
+        except BaseException:
+            # keep the batch queued so ticket indices stay aligned and the
+            # next flush still reports every ticket.  Solver errors have
+            # already resolved their tickets to failed artifacts inside the
+            # Session, so that flush yields status="error" reports for them
+            # (not a re-solve); interrupts leave tickets unresolved and DO
+            # re-solve on the next flush.
+            self._pending = batch + self._pending
+            raise
         self._results.extend(res)
         # bound retained results so a long-running serving loop cannot grow
         # without limit; tickets older than the window raise in result()
@@ -295,6 +333,7 @@ class PlanService:
         return res
 
     def result(self, ticket: _Ticket):
+        """The report for ``ticket`` — auto-flushes when it is still queued."""
         if ticket.index >= self._base + len(self._results):
             self.flush()
         if ticket.index < self._base:

@@ -35,7 +35,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    # BooleanOptionalAction gives the --no-greedy negation; the historical
+    # `action="store_true", default=True` made the flag impossible to turn off
+    ap.add_argument("--greedy", action=argparse.BooleanOptionalAction, default=True,
+                    help="greedy (argmax) decoding; --no-greedy samples from "
+                         "the softmax with --temperature")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for --no-greedy sampling")
     ap.add_argument("--plan", type=int, default=0,
                     help="also DLT-plan N request batches over a 4-stage platform")
     ap.add_argument("--plan-backend", default="batched",
@@ -77,18 +83,26 @@ def main(argv=None):
     t_prefill = time.time() - t0
     serve_step = jax.jit(make_serve_step(cfg, policy), donate_argnums=(1,))
 
-    def sample(lg):
-        nxt = jnp.argmax(lg[:, -1:], axis=-1)
+    sample_key = jax.random.PRNGKey(args.seed + 1)
+
+    def sample(lg, key):
+        if args.greedy:
+            nxt = jnp.argmax(lg[:, -1:], axis=-1)
+        else:  # stochastic decoding: one categorical draw per sequence
+            scaled = lg[:, -1, :] / jnp.maximum(args.temperature, 1e-6)
+            nxt = jax.random.categorical(key, scaled, axis=-1)[:, None]
         if cfg.family == "audio" and nxt.ndim == 2:
             nxt = nxt[..., None].repeat(cfg.num_codebooks, -1) if nxt.shape[-1] != cfg.num_codebooks else nxt
         return nxt.astype(jnp.int32)
 
     out_tokens = []
-    nxt = sample(logits)
+    sample_key, k0 = jax.random.split(sample_key)
+    nxt = sample(logits, k0)
     t1 = time.time()
     for i in range(args.gen_len):
         logits, cache = serve_step(params, cache, nxt, jnp.int32(pos + i))
-        nxt = sample(logits)
+        sample_key, ki = jax.random.split(sample_key)
+        nxt = sample(logits, ki)
         out_tokens.append(np.asarray(nxt))
     t_decode = time.time() - t1
     n_tok = args.gen_len * args.batch
@@ -115,30 +129,32 @@ def main(argv=None):
                            flops_per_sample=fl,
                            return_bytes_per_sample=args.return_ratio * 4.0 * args.prompt_len)
                  for _ in range(args.plan)]
-        use_engine = args.plan_backend in ("batched", "pallas")
-        if use_engine:  # the jax-backed engine + its solution cache; "pallas"
-            # swaps the solve/replay hot loops for the fused kernels
-            from repro.engine import PlanService
+        # one Session is the whole serving state: backend handles, solution
+        # cache, and the coalescing submit queue (repro.api — DESIGN.md §7)
+        from repro.api import Policy, Session
 
-            service = PlanService(backend=args.plan_backend)
-            planner = Planner(stages, links, cache=service.cache,
-                              topology=args.topology)
-        else:  # serial registry backends: no engine import, no cache
-            planner = Planner(stages, links, topology=args.topology)
+        use_engine = args.plan_backend in ("batched", "pallas")
+        session = Session(policy=Policy(installments=2,
+                                        backend=args.plan_backend))
+        planner = Planner(stages, links, topology=args.topology,
+                          session=session)
         plan = planner.plan(loads, q=2, backend=args.plan_backend)
+        art = plan.artifact
         print(f"DLT plan for {args.plan} request batches over 4 "
               f"{args.topology} stages: makespan={plan.makespan * 1e3:.3f}ms "
-              f"(backend={plan.result.backend})")
+              f"(backend={art.backend}, artifact v{art.version}, "
+              f"{len(art.to_json())} JSON bytes)")
         for t, (n, j) in enumerate(plan.cells):
             print(f"  load {n} installment {j}: "
                   f"requests/stage={[int(x) for x in plan.samples[t]]}")
-        # a replanning tick with an unchanged platform state: with the
-        # engine backend this is a pure solution-cache hit
+        # a replanning tick with an unchanged platform state: with an engine
+        # backend this is a pure solution-cache hit, visible in the artifact
         plan2 = planner.plan(loads, q=2, backend=args.plan_backend)
-        tick = f"replan tick: makespan={plan2.makespan * 1e3:.3f}ms"
+        tick = (f"replan tick: makespan={plan2.makespan * 1e3:.3f}ms "
+                f"cache_hit={plan2.artifact.cache_hit}")
         if use_engine:
-            st = service.stats()
-            tick += f" cache={st['hits']} hit / {st['misses']} miss"
+            st = session.stats().get("cache", {})
+            tick += f" cache={st.get('hits', 0)} hit / {st.get('misses', 0)} miss"
         print(tick)
         if args.auto_t:
             # cost-aware installment chooser: one bulk sweep up the q ladder

@@ -45,27 +45,27 @@ __all__ = ["stage_batches", "make_dlt_train_step", "ChainReplanner"]
 
 
 class ChainReplanner:
-    """Online replanning for a running platform, routed through the registry.
+    """Online replanning for a running platform, through the session front door.
 
-    Owns a :class:`repro.core.planner.Planner` plus an engine solution cache
-    (repro.engine): every replan — straggler drift, stage failure, or a bulk
-    what-if sweep — is stated as a :class:`SolveRequest` and handed to the
-    ``backend`` registry entry (the batched engine by default; ``"pallas"``
-    runs the same engine with its solve/replay hot loops in fused Pallas
-    kernels), and platform states the chain has seen before replay from the
-    cache instead of re-solving.  The topology rides on the planner
+    Owns a :class:`repro.core.planner.Planner` and shares its
+    :class:`repro.api.Session` (backend handles + solution cache): every
+    replan — straggler drift, stage failure, or a bulk what-if sweep — is
+    stated as a (Problem, Policy) pair against the ``backend`` registry
+    entry (the batched engine by default; ``"pallas"`` runs the same engine
+    with its solve/replay hot loops in fused Pallas kernels), and platform
+    states the chain has seen before replay from the session's cache
+    instead of re-solving.  The topology rides on the planner
     (``Planner(topology="star")`` replans a one-port master fleet with the
-    same cache/backend plumbing); the historical name stays.
+    same session plumbing); the historical name stays.
     """
 
     def __init__(self, planner: Planner, q: int | list = 2, backend="batched"):
-        from repro.engine.cache import SolutionCache
-
         self.planner = planner
         self.q = q
         self.backend = backend
-        if self.planner._cache is None:
-            self.planner._cache = SolutionCache()
+        # the planner's session owns the solution cache (created lazily on
+        # first engine use) — touching it here just pins the sharing intent
+        self.session = planner.session
 
     def replan(self, batches: list) -> DLTPlan:
         return self.planner.plan(batches, q=self.q, backend=self.backend)
@@ -101,14 +101,14 @@ class ChainReplanner:
         """Straggler sensitivity: predicted makespan per speed scenario.
 
         ``speed_scales`` is [S, m] multipliers on the stages' effective
-        FLOP/s; all S hypothetical instances solve in one engine batch.
+        FLOP/s; all S hypothetical problems solve in one session bulk call.
         Returns the S predicted makespans.
         """
         import dataclasses as _dc
 
-        from repro.core.backends import SolveRequest, get_backend
+        from repro.api import Policy
 
-        insts = []
+        problems = []
         m = len(self.planner.stages)
         for scales in np.atleast_2d(np.asarray(speed_scales, dtype=np.float64)):
             if scales.shape != (m,):
@@ -121,11 +121,15 @@ class ChainReplanner:
                 for s, f in zip(self.planner.stages, scales)
             ]
             p = Planner(stages, self.planner.links, ewma=self.planner.ewma,
-                        topology=self.planner.topology)
-            insts.append(p.to_instance(batches, q=self.q))
-        solver = get_backend(self.backend, cache=self.planner._cache)
-        results = solver.solve_many([SolveRequest(instance=i) for i in insts])
-        return np.array([r.makespan for r in results])
+                        topology=self.planner.topology, session=self.session)
+            problems.append(p.to_problem(batches))
+        backend = self.backend if isinstance(self.backend, str) else "auto"
+        arts = self.session.solve_bulk(
+            problems,
+            Policy(installments=self.q, backend=backend),
+            backend=None if isinstance(self.backend, str) else self.backend,
+        )
+        return np.array([a.makespan for a in arts])
 
 
 def stage_batches(plan: DLTPlan, batches: list, n_stages: int):

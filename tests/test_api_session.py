@@ -1,0 +1,395 @@
+"""Session: coalescing submission, ticket lifecycle, and shim parity.
+
+Covers the redesign's contracts:
+
+* coalescing — N staggered submits land in <= ceil(N / max_batch) flushes,
+  deadlines bound latency, ``flush()`` is idempotent, ``result()``
+  auto-flushes (the fixed ``PlanService._Ticket`` semantics, folded into
+  ``Session.submit`` and regression-tested on both surfaces);
+* every historical entry point (``Planner.plan*``, ``PlanService``,
+  ``solve_batch``, ``ChainReplanner``) matches the Session path at <=1e-9
+  and the deprecated ones emit ``DeprecationWarning``.
+"""
+
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import Policy, Problem, Session
+from repro.core.backends import SolveRequest
+from repro.core.instance import random_instance
+from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
+
+_STAGES = [StageSpec(f"s{i}", 1e9 * (1 + 0.3 * i)) for i in range(3)]
+_LINKS = [LinkSpec(1e8, 50e-6)] * 2
+_BATCHES = [
+    BatchSpec(num_samples=64, bytes_per_sample=4096, flops_per_sample=1e7)
+    for _ in range(2)
+]
+
+
+def _problems(n, seed=0, m=3, n_loads=2):
+    rng = np.random.default_rng(seed)
+    return [
+        Problem.from_instance(random_instance(rng, m=m, n_loads=n_loads, q=1))
+        for _ in range(n)
+    ]
+
+
+# ------------------------------------------------------------- coalescing
+
+
+def test_staggered_submits_coalesce_into_expected_flush_count():
+    sess = Session(policy=Policy(backend="batched"), max_batch=4)
+    tickets = [sess.submit(p) for p in _problems(10)]
+    # 10 staggered submits with bucket size 4: exactly 2 size-triggered
+    # flushes so far, one final result()-driven flush for the tail
+    assert sess.flush_count == 2
+    arts = [t.result() for t in tickets]
+    assert sess.flush_count == 3  # == ceil(10 / 4), no per-submit solving
+    assert all(a.ok for a in arts)
+    # every artifact matches its own synchronous solve
+    ref_sess = Session()
+    for p, a in zip(_problems(10), arts):
+        ref = ref_sess.solve(p, Policy(backend="simplex"))
+        assert a.makespan == pytest.approx(ref.makespan, rel=1e-9, abs=1e-9)
+
+
+def test_deadline_honored_by_synchronous_calls_and_resolved_tickets():
+    sess = Session(policy=Policy(backend="simplex"), max_batch=1000)
+    p1, p2, p3 = _problems(3, seed=9)
+    t1 = sess.submit(p1, deadline=0.01)
+    time.sleep(0.02)
+    # a synchronous solve after expiry must flush the queued ticket too
+    sess.solve(p2)
+    assert t1.done() and t1.result().ok
+    # result() on an already-resolved ticket still expires others' deadlines
+    t2 = sess.submit(p3, deadline=0.01)
+    time.sleep(0.02)
+    t1.result()
+    assert t2._artifact is not None
+
+
+def test_bad_submit_cannot_poison_the_queue():
+    # config errors surface AT SUBMIT, to the caller that made them — a
+    # coalesced batch can never be wedged by someone else's bad submit
+    sess = Session(policy=Policy(backend="simplex"), max_batch=None)
+    good = sess.submit(_problems(1, seed=11)[0])
+    with pytest.raises(ValueError, match="nonexistent"):
+        sess.submit(_problems(1, seed=12)[0], Policy(backend="nonexistent"))
+    with pytest.raises(ValueError):  # installments/loads mismatch: same story
+        sess.submit(_problems(1, seed=12)[0], Policy(installments=(1, 2, 3),
+                                                     backend="simplex"))
+    assert sess.stats()["pending"] == 1  # only the good submit is queued
+    assert good.result().ok
+
+
+def test_solver_error_resolves_tickets_as_failed_artifacts():
+    # a backend that raises mid-flush must not wedge the queue: its group's
+    # tickets resolve to status="error" artifacts, other groups still solve,
+    # and the error re-raises once everything is resolved
+    from repro.core.backends import SolverBackend
+
+    class Exploding(SolverBackend):
+        name = "exploding"
+
+        def solve_many(self, requests):
+            raise RuntimeError("boom")
+
+    sess = Session(policy=Policy(backend="simplex"), max_batch=None)
+    good = sess.submit(_problems(1, seed=11)[0])
+    bad = sess.submit(_problems(1, seed=12)[0], backend=Exploding())
+    with pytest.raises(RuntimeError, match="boom"):
+        sess.flush()
+    assert sess.stats()["pending"] == 0  # nothing wedged
+    assert good.result().ok  # the healthy group solved in the same flush
+    art = bad.result()
+    assert art.status == "error" and not art.ok
+    assert "boom" in art.fallback_events[0]
+
+
+def test_plan_service_flush_failure_keeps_queue_and_indices():
+    # PlanService inherits the no-loss contract: a transient backend error
+    # leaves the queue (and the integer ticket indexing) intact for a retry
+    from repro.engine import PlanService
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        svc = PlanService()
+    t = svc.submit(_problems(1, seed=13)[0].to_instance(1))
+    real_flush, calls = svc._session.flush, []
+
+    def flaky_flush():
+        if not calls:
+            calls.append(1)
+            raise RuntimeError("transient")
+        return real_flush()
+
+    svc._session.flush = flaky_flush
+    with pytest.raises(RuntimeError, match="transient"):
+        svc.flush()
+    assert svc.result(t).ok  # retry succeeds, same ticket
+
+
+def test_backend_instance_override_keeps_bulk_solves_batched():
+    # an instance override must resolve to ONE handle -> ONE solve_many
+    from repro.core.backends import SolverBackend, get_backend
+
+    calls = []
+
+    class Counting(SolverBackend):
+        name = "counting"
+
+        def solve_many(self, requests):
+            calls.append(len(requests))
+            return get_backend("simplex").solve_many(requests)
+
+    sess = Session()
+    arts = sess.solve_bulk(_problems(6, seed=15), backend=Counting())
+    assert all(a.ok for a in arts)
+    assert calls == [6]  # not six solve_many([1]) calls
+
+
+def test_plan_service_retry_after_error_returns_failed_reports():
+    # after a backend error, retrying the flush yields real (failed)
+    # reports — never None — for the errored tickets
+    from repro.core.backends import SolverBackend
+    from repro.engine import PlanService
+
+    class ExplodingOnce(SolverBackend):
+        name = "batched"  # engine-family label so PlanService accepts it
+
+        def __init__(self, cache=None):
+            super().__init__(cache=cache)
+            self.calls = 0
+
+        def solve_many(self, requests):
+            self.calls += 1
+            raise RuntimeError("boom")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        svc = PlanService()
+    # seed the resolved-handle memo BEFORE submitting (handles resolve at
+    # submit time), so both tickets carry the exploding backend
+    svc._session._backends[("batched", True, 1e-9)] = ExplodingOnce()
+    insts = [p.to_instance(1) for p in _problems(2, seed=16)]
+    t1, t2 = svc.submit(insts[0]), svc.submit(insts[1])
+    with pytest.raises(RuntimeError, match="boom"):
+        svc.flush()
+    reports = svc.flush()  # retry: errored tickets yield failed reports
+    assert len(reports) == 2
+    assert all(r is not None and not r.ok and r.status == "error" for r in reports)
+    assert svc.result(t1).status == "error" and svc.result(t2).status == "error"
+
+
+def test_policy_fallback_respected_for_backend_instances():
+    from repro.engine.service import BatchedBackend
+
+    sess = Session()
+    be = BatchedBackend()  # caller's instance: fallback defaults to True
+    art = sess.solve(_problems(1, seed=14)[0],
+                     Policy(backend="batched", fallback=False), backend=be)
+    assert art.ok
+    assert be.fallback is True  # never mutated
+    handle = sess.backend(be, fallback=False)
+    assert handle.fallback is False and handle is not be
+
+
+def test_serial_backend_instance_does_not_import_engine():
+    # the lazy invariant: solving through a *serial* backend instance must
+    # not build a solution cache (and with it import the JAX engine)
+    from repro.core.backends import SimplexBackend
+
+    sess = Session()
+    art = sess.solve(_problems(1, seed=10)[0], backend=SimplexBackend())
+    assert art.ok
+    assert sess._cache is None and sess._extra_caches == {}
+
+
+def test_per_call_cache_quantum_is_honored():
+    sess = Session()
+    base = Problem(w=[1.0, 2.0], z=[0.3], v_comm=[1.0], v_comp=[1.0])
+    near = Problem(w=[1.0 * (1 + 1e-6), 2.0], z=[0.3], v_comm=[1.0], v_comp=[1.0])
+    coarse = Policy(backend="batched", cache_quantum=1e-3)
+    sess.solve(base, coarse)
+    # coarser quantum: the near-identical problem replays from the cache ...
+    assert sess.solve(near, coarse).cache_hit
+    # ... while the default-quantum cache keeps them distinct
+    assert not sess.solve(near, Policy(backend="batched")).cache_hit
+
+
+def test_seeded_cache_serves_default_requests_at_its_own_quantum():
+    # seeding overrides the policy default: the historical cache= contract
+    from repro.engine.cache import SolutionCache
+
+    seeded = SolutionCache(quantum=1e-3)
+    sess = Session(cache=seeded)
+    base = Problem(w=[1.0, 2.0], z=[0.3], v_comm=[1.0], v_comp=[1.0])
+    near = Problem(w=[1.0 * (1 + 1e-6), 2.0], z=[0.3], v_comm=[1.0], v_comp=[1.0])
+    sess.solve(base, Policy(backend="batched"))
+    assert seeded.misses >= 1  # traffic really went to the seeded cache
+    # ... at the seeded cache's own (coarse) quantum
+    assert sess.solve(near, Policy(backend="batched")).cache_hit
+
+
+def test_planner_rejects_cache_and_session_together():
+    from repro.engine.cache import SolutionCache
+
+    with pytest.raises(ValueError, match="either cache= or session="):
+        Planner(list(_STAGES), list(_LINKS), cache=SolutionCache(),
+                session=Session())
+
+
+def test_plan_auto_t_accepts_a_generator_ladder():
+    planner = Planner(list(_STAGES), list(_LINKS))
+    res = planner.plan_auto_T(_BATCHES, installment_cost=1e-3,
+                              backend="serial", qs=(q for q in (1, 2)))
+    assert set(res.makespans) == {1, 2}
+
+
+def test_deadline_bounds_coalescing_latency():
+    sess = Session(policy=Policy(backend="simplex"), max_batch=1000)
+    p1, p2 = _problems(2)
+    t1 = sess.submit(p1, deadline=0.05)
+    assert not t1.done() and sess.flush_count == 0  # still coalescing
+    time.sleep(0.06)
+    sess.submit(p2)  # first call after expiry flushes BOTH
+    assert t1.done() and sess.flush_count == 1
+    assert t1.result().ok
+
+
+def test_flush_idempotent_and_result_autoflushes():
+    sess = Session(policy=Policy(backend="simplex"), max_batch=None)
+    assert sess.flush() == [] and sess.flush_count == 0  # empty: no-op
+    t = sess.submit(_problems(1)[0])
+    assert not t.done()
+    art = t.result()  # auto-flush
+    assert art.ok and sess.flush_count == 1
+    assert sess.flush() == [] and sess.flush_count == 1  # double flush: no-op
+    assert t.result() is art  # pinned on the ticket, stable across calls
+
+
+def test_submit_accepts_instances_and_requests():
+    rng = np.random.default_rng(3)
+    inst = random_instance(rng, m=3, n_loads=2, q=2)
+    sess = Session(policy=Policy(backend="simplex"))
+    a1 = sess.submit(inst).result()
+    assert a1.ok and a1.q == (2, 2)  # the instance's q became the plan
+    a2 = sess.submit(SolveRequest(instance=inst, objective="completion")).result()
+    assert a2.ok and a2.policy.objective == "completion"
+    with pytest.raises(TypeError):
+        sess.submit("not a problem")
+
+
+def test_priority_orders_work_within_a_flush():
+    sess = Session(policy=Policy(backend="simplex"), max_batch=None)
+    lo = sess.submit(_problems(1, seed=1)[0], priority=0)
+    hi = sess.submit(_problems(1, seed=2)[0], priority=5)
+    arts = sess.flush()
+    assert len(arts) == 2  # returned in submission order regardless
+    assert lo.result().ok and hi.result().ok
+
+
+def test_bulk_solve_matches_singles_and_caches():
+    probs = _problems(6, seed=4)
+    sess = Session(policy=Policy(backend="batched"))
+    bulk = sess.solve_bulk(probs)
+    singles = [Session().solve(p, Policy(backend="simplex")) for p in probs]
+    for a, b in zip(bulk, singles):
+        assert a.makespan == pytest.approx(b.makespan, rel=1e-9, abs=1e-9)
+    again = sess.solve_bulk(probs)
+    assert all(a.cache_hit for a in again)
+
+
+# ------------------------------------------------------------- shim parity
+
+
+def test_planner_plan_matches_session_exactly():
+    planner = Planner(list(_STAGES), list(_LINKS))
+    plan = planner.plan(_BATCHES, q=2, backend="simplex")
+    art = Session().solve(planner.to_problem(_BATCHES),
+                          Policy(installments=2, backend="simplex"))
+    assert plan.makespan == pytest.approx(art.makespan, rel=1e-9, abs=1e-9)
+    np.testing.assert_allclose(plan.result.schedule.gamma, art.gamma, atol=1e-9)
+    # the plan carries its artifact (ship/diff/replay the exact decision)
+    assert plan.artifact is not None
+    assert plan.artifact.diff(art, tol=1e-9) == {}
+
+
+def test_plan_service_shim_warns_and_matches_session():
+    from repro.engine import PlanService
+
+    probs = _problems(4, seed=5)
+    insts = [p.to_instance(1) for p in probs]
+    with pytest.warns(DeprecationWarning, match="Session"):
+        svc = PlanService()
+    tickets = [svc.submit(i) for i in insts]
+    # regression (the old lifecycle bug): result() on an UNFLUSHED ticket
+    # must auto-flush, and a later explicit flush() must be a no-op
+    rep = svc.result(tickets[2])
+    assert rep.ok
+    assert svc.flush() == []
+    sess = Session(policy=Policy(backend="batched"))
+    arts = sess.solve_bulk(probs)
+    for t, art in zip(tickets, arts):
+        assert svc.result(t).makespan == pytest.approx(
+            art.makespan, rel=1e-9, abs=1e-9
+        )
+
+
+def test_plan_service_double_flush_and_interleaved_submits():
+    from repro.engine import PlanService
+
+    insts = [p.to_instance(1) for p in _problems(5, seed=6)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        svc = PlanService()
+    t0 = svc.submit(insts[0])
+    first = svc.flush()
+    assert len(first) == 1 and svc.flush() == []  # idempotent
+    t1 = svc.submit(insts[1])
+    t2 = svc.submit(insts[2])
+    assert svc.result(t2).ok  # auto-flush resolves both
+    assert svc.result(t1).ok and svc.result(t0).ok
+    assert svc.flush() == []
+
+
+def test_solve_batch_shim_warns_and_matches():
+    insts = [p.to_instance(1) for p in _problems(3, seed=7)]
+    from repro.core.solver import solve_batch
+
+    with pytest.warns(DeprecationWarning, match="solve_bulk"):
+        reports = solve_batch(insts, backend="serial")
+    arts = Session().solve_bulk(insts, Policy(backend="serial"))
+    for r, a in zip(reports, arts):
+        assert r.makespan == pytest.approx(a.makespan, rel=1e-9, abs=1e-9)
+
+
+def test_adversary_sweep_through_a_shared_session():
+    from repro.core.heuristics import adversary_sweep
+
+    rng = np.random.default_rng(8)
+    insts = [random_instance(rng, m=3, n_loads=2, q=1) for _ in range(6)]
+    sess = Session()
+    batched = adversary_sweep(insts, simulator="batched", session=sess)
+    serial = adversary_sweep(insts, simulator="serial")
+    for name in batched:
+        ok = np.isfinite(serial[name])
+        np.testing.assert_allclose(batched[name][ok], serial[name][ok], atol=1e-9)
+
+
+def test_chain_replanner_shares_the_planner_session():
+    from repro.runtime.dlt_runner import ChainReplanner
+
+    rp = ChainReplanner(Planner(list(_STAGES), list(_LINKS)), q=2)
+    plan = rp.replan(_BATCHES)
+    assert rp.session is rp.planner.session
+    assert plan.artifact is not None and plan.artifact.ok
+    # failure replan keeps the same session (cache carries over)
+    rp.on_failure(1, _BATCHES, restore_delay=0.01)
+    assert rp.planner.session is rp.session
+    mks = rp.what_if_speeds(_BATCHES, [[1.0, 1.0], [0.5, 1.0]])
+    assert mks.shape == (2,) and mks[1] >= mks[0] - 1e-12

@@ -1,0 +1,145 @@
+"""Problem/Policy specs: hashing, equality, and the one key derivation.
+
+The load-bearing property: two Problems that compare equal (and only
+those) hash identically, derive the same content key, and therefore land
+in the same arena bucket and the same solution-cache slot — because every
+layer derives its key from repro.core.keys, never locally.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import Policy, Problem
+from repro.core.instance import random_instance
+from repro.core.keys import instance_bucket_key, instance_content_key
+
+
+def _problem(**kw):
+    base = dict(
+        w=[1.0, 2.0, 1.5],
+        z=[0.3, 0.2],
+        v_comm=[1.0, 2.0],
+        v_comp=[1.0, 1.5],
+        latency=[1e-3, 2e-3],
+        release=[0.0, 0.1],
+    )
+    base.update(kw)
+    return Problem(**base)
+
+
+# ------------------------------------------------------------ Problem basics
+
+
+def test_problem_frozen_hashable_equal():
+    p1, p2 = _problem(), _problem()
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert p1 != _problem(w=[1.0, 2.0, 1.500001])
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p1.w = (1.0,)
+    # usable as a dict key (the whole point of being frozen)
+    assert {p1: "a"}[p2] == "a"
+
+
+def test_problem_broadcasts_and_validates():
+    p = _problem(tau=0.0, return_ratio=0.25)
+    assert p.tau == (0.0, 0.0, 0.0)
+    assert p.return_ratio == (0.25, 0.25) and p.has_returns
+    with pytest.raises(ValueError):
+        _problem(z=[0.3])  # wrong link count
+    with pytest.raises(ValueError):
+        _problem(w=[1.0, -2.0, 1.5])  # Instance's domain validation fires
+    with pytest.raises(ValueError):
+        _problem(topology="ring")
+    with pytest.raises(ValueError):
+        Problem(w=[1.0, 2.0], z=[0.3], v_comm=[1.0], v_comp=[1.0],
+                w_per_load=[[1.0], [2.0], [3.0]])  # [m,N] mismatch
+
+
+def test_problem_instance_round_trip():
+    rng = np.random.default_rng(0)
+    for topology, ret in (("chain", 0.0), ("star", 0.25)):
+        inst = random_instance(rng, m=4, n_loads=3, q=2, with_latency=True,
+                               topology=topology, return_ratio=ret)
+        p = Problem.from_instance(inst)
+        back = p.to_instance(inst.q)
+        assert back.topology == inst.topology and back.q == inst.q
+        for a, b in (
+            (back.platform.w, inst.platform.w),
+            (back.platform.z, inst.platform.z),
+            (back.platform.latency, inst.platform.latency),
+            (back.loads.v_comm, inst.loads.v_comm),
+            (back.loads.release, inst.loads.release),
+            (back.loads.return_ratio, inst.loads.return_ratio),
+        ):
+            np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ key derivation
+
+
+def test_same_key_same_bucket_and_cache_slot():
+    from repro.engine.cache import CachedSolution, SolutionCache
+    from repro.engine.arena import pack_instances
+
+    p1, p2 = _problem(), _problem()
+    q = (2, 2)
+    # one content key...
+    assert p1.key(q=q) == p2.key(q=q)
+    # ... means one arena bucket ...
+    i1, i2 = p1.to_instance(q), p2.to_instance(q)
+    buckets = pack_instances([i1, i2])
+    assert len(buckets) == 1 and buckets[0].B == 2
+    assert buckets[0].key == p1.bucket_key(q=q) == instance_bucket_key(i1)
+    # ... and one cache slot (put under p1's key, hit under p2's)
+    cache = SolutionCache()
+    cache.put(cache.key(i1), CachedSolution(
+        gamma=np.zeros((p1.m, sum(q))), lp_makespan=1.0, backend="test"))
+    assert cache.get(cache.key(i2)) is not None
+    # the cache key IS the Problem key (same derivation, repro.core.keys)
+    assert cache.key(i1) == p1.key(q=q) == instance_content_key(i1)
+
+
+def test_key_quantization_and_separation():
+    p = _problem()
+    # sub-quantum perturbations are the same problem ...
+    near = _problem(w=[1.0 * (1 + 1e-12), 2.0, 1.5])
+    assert p != near  # structurally different tuples ...
+    assert p.key(q=1) == near.key(q=1)  # ... but one cache slot
+    # ... super-quantum perturbations, installments, topology, returns split
+    assert p.key(q=1) != _problem(w=[1.0 * (1 + 1e-6), 2.0, 1.5]).key(q=1)
+    assert p.key(q=1) != p.key(q=2)
+    assert p.key(q=1) != _problem(topology="star").key(q=1)
+    assert p.key(q=1) != _problem(return_ratio=0.1).key(q=1)
+    assert p.key(q=1) != p.key(q=1, objective="completion")
+
+
+# ------------------------------------------------------------ Policy
+
+
+def test_policy_hashable_and_broadcasts():
+    a = Policy(installments=2, backend="batched")
+    b = Policy(installments=(2,), backend="batched")
+    assert a == b and hash(a) == hash(b)
+    p = _problem()
+    assert a.q_for(p) == (2, 2)
+    assert Policy(installments=(1, 3)).q_for(p) == (1, 3)
+    with pytest.raises(ValueError):
+        Policy(installments=(1, 2, 3)).q_for(p)  # 3 entries, 2 loads
+    with pytest.raises(ValueError):
+        Policy(installments=0)
+    with pytest.raises(ValueError):
+        Policy(t_candidates=())
+    with pytest.raises(ValueError):
+        Policy(cache_quantum=0.0)
+
+
+def test_policy_q_candidates_ladder():
+    p = _problem()
+    fixed = Policy(installments=3)
+    assert fixed.q_candidates(p) == [(3, 3)]
+    auto = Policy(auto_t=True, t_max=3)
+    assert auto.q_candidates(p) == [(1, 1), (2, 2), (3, 3)]
+    explicit = Policy(auto_t=True, t_candidates=(1, 4))
+    assert explicit.q_candidates(p) == [(1, 1), (4, 4)]

@@ -1,0 +1,79 @@
+"""Public-API snapshot: the front-door surface changes deliberately or not
+at all.
+
+``tests/public_api_manifest.json`` is the checked-in contract: the
+``repro.api`` export list and the parameter names of every front-door
+method and compatibility shim.  A PR that reshapes the surface must edit
+the manifest in the same diff — review sees the API change explicitly
+instead of discovering it downstream.
+
+Regenerate after a *deliberate* change with::
+
+    PYTHONPATH=src python tests/test_public_api.py --regen
+"""
+
+import inspect
+import json
+import pathlib
+
+_MANIFEST = pathlib.Path(__file__).parent / "public_api_manifest.json"
+
+
+def _resolve(dotted: str):
+    """'repro.api.Session.solve' -> the attribute, importing the module."""
+    parts = dotted.split(".")
+    for k in range(len(parts), 0, -1):
+        try:
+            import importlib
+
+            mod = importlib.import_module(".".join(parts[:k]))
+        except ImportError:
+            continue
+        obj = mod
+        for attr in parts[k:]:
+            obj = getattr(obj, attr)
+        return obj
+    raise ImportError(dotted)
+
+
+def _current_manifest() -> dict:
+    import repro.api as api
+
+    saved = json.loads(_MANIFEST.read_text())
+    return {
+        "repro.api.__all__": sorted(api.__all__),
+        "signatures": {
+            name: [p for p in inspect.signature(_resolve(name)).parameters]
+            for name in saved["signatures"]
+        },
+    }
+
+
+def test_api_exports_match_manifest():
+    saved = json.loads(_MANIFEST.read_text())
+    assert _current_manifest()["repro.api.__all__"] == saved["repro.api.__all__"], (
+        "repro.api.__all__ changed — if deliberate, regenerate "
+        "tests/public_api_manifest.json (see module docstring)"
+    )
+
+
+def test_shim_signatures_match_manifest():
+    saved = json.loads(_MANIFEST.read_text())
+    current = _current_manifest()["signatures"]
+    for name, params in saved["signatures"].items():
+        assert current[name] == params, (
+            f"{name} signature changed: {params} -> {current[name]} — if "
+            "deliberate, regenerate tests/public_api_manifest.json"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _MANIFEST.write_text(
+            json.dumps(_current_manifest(), indent=2, sort_keys=True) + "\n"
+        )
+        print(f"regenerated {_MANIFEST}")
+    else:
+        print(__doc__)
