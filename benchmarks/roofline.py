@@ -31,6 +31,35 @@ ARCH_ORDER = [
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
+def kernel_roofline(flops: float, bytes_moved: float, seconds: float) -> dict:
+    """Achieved-vs-peak context for one measured kernel timing.
+
+    The micro-bench counterpart of the dry-run table above: given a kernel's
+    FLOP count, its minimal HBM traffic, and a wall-clock measurement, place
+    it on the v5e roofline — arithmetic intensity (FLOP/byte), achieved
+    GFLOP/s, achieved fraction of the compute and memory roofs, and which
+    roof binds at that intensity (compute iff intensity >= the ridge point
+    ``PEAK_FLOPS_BF16 / HBM_BW`` ~ 240 FLOP/B).  CPU-interpret timings put
+    the achieved fractions near zero — the value there is the intensity and
+    bottleneck columns, which are machine-independent.
+    """
+    from repro.launch.mesh import HW
+
+    intensity = flops / bytes_moved if bytes_moved > 0 else float("inf")
+    achieved = flops / seconds if seconds > 0 else 0.0
+    ridge = HW.PEAK_FLOPS_BF16 / HW.HBM_BW
+    # the memory roof at this intensity: HBM_BW * intensity FLOP/s — the
+    # achieved fraction of it equals achieved-bandwidth / peak-bandwidth
+    mem_roof = HW.HBM_BW * intensity
+    return {
+        "intensity_flop_per_byte": intensity,
+        "achieved_gflops": achieved / 1e9,
+        "peak_frac_compute": achieved / HW.PEAK_FLOPS_BF16,
+        "peak_frac_memory": achieved / mem_roof if mem_roof > 0 else 0.0,
+        "bottleneck": "compute" if intensity >= ridge else "memory",
+    }
+
+
 def analytic_memory_floor(rec: dict) -> float | None:
     """Minimum HBM bytes per device per step, from first principles.
 

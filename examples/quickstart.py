@@ -112,6 +112,35 @@ st = bursty.stats()
 print(f"20 staggered submits -> {st['flushes']} engine flushes "
       f"(max_batch=8); mean makespan {np.mean(makespans):.3f}s")
 
+# ---------------------------------------------------------------- 3bis
+print("\n=== the flight recorder: spans + metrics (DESIGN.md §8) ===")
+# session.trace() records spans for everything inside the block; the saved
+# file is Chrome trace-event JSON (open in chrome://tracing or Perfetto)
+with bursty.trace() as tr:
+    bursty.solve_bulk([Problem.from_instance(
+        random_instance(rng, m=3, n_loads=2, q=1)) for _ in range(8)])
+stage_us = {n: tr.total_us(n) for n in
+            ("engine.lp_build", "engine.simplex", "engine.replay")}
+print(f"traced {len(tr)} spans over {tr.total_us('session.trace')/1e3:.1f}ms: "
+      + ", ".join(f"{n.split('.')[1]} {us/1e3:.1f}ms"
+                  for n, us in stage_us.items()))
+# tr.save("session.trace.json")  # ship it to chrome://tracing
+
+# every solve also feeds the process metrics registry (one key schema for
+# cache/session/engine/simplex; `serve --metrics-port` exposes it to scrapes)
+from repro.obs import get_registry
+snap = get_registry().snapshot()
+print("metrics: "
+      f"engine bulk solves = {snap.get('repro_engine_bulk_solves_total{path=batched}', 0):.0f}, "
+      f"cache hits = {snap.get('repro_cache_hits_total', 0):.0f}, "
+      f"phase-2 pivots = {snap.get('repro_simplex_pivots_total{path=batched,phase=2}', 0):.0f}")
+# and the artifact carries its own telemetry: per-stage seconds + LP stats
+tel = tickets[0].result().telemetry
+if tel and "lp" in tel:
+    print(f"first ticket's telemetry: bucket B={tel['bucket']['B']}, "
+          f"pivots={tel['lp']['pivots_phase1']}+{tel['lp']['pivots_phase2']}, "
+          f"simplex {tel['stages']['simplex_s']*1e3:.1f}ms")
+
 # ------------------------------------------------------------------- 4
 print("\n=== the same LP scheduling real training batches on a chain ===")
 cfg = smoke_variant(get_arch("llama3.2-3b"))

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Throughput regression gate over bench_out/summary.json.
+
+Validates the summary against its schema (benchmarks.run.validate_summary),
+then compares every tier-1 metric in benchmarks/baseline.json against the
+summary's metrics section: a metric that dropped more than ``--threshold``
+(default 20%) below its baseline fails the gate.  Metrics missing from the
+summary fail too — a silently-skipped bench must not read as a pass.
+
+CI currently runs this ``--warn-only`` (exit 0, problems printed) because
+quick-mode numbers on a shared CI box are noisy; the flip-to-blocking plan
+is in DESIGN.md §8.  Run locally after ``python -m benchmarks.run --full``
+for the real verdict.
+
+  PYTHONPATH=src python scripts/check_regression.py [--warn-only]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)  # benchmarks package
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def check(summary: dict, baseline: dict, threshold: float) -> tuple:
+    """Returns (problems, report_lines) — problems empty means the gate holds."""
+    from benchmarks.run import validate_summary
+
+    problems = list(validate_summary(summary))
+    report = []
+    got = summary.get("metrics") or {}
+    for name, base in sorted((baseline.get("metrics") or {}).items()):
+        if name not in got:
+            problems.append(f"missing from summary: {name}")
+            continue
+        val = float(got[name])
+        floor = base * (1.0 - threshold)
+        delta = (val - base) / base
+        line = f"{name}: {val:.1f} vs baseline {base:.1f} ({delta:+.1%})"
+        if val < floor:
+            problems.append(f"regression: {line}, floor {floor:.1f}")
+        else:
+            report.append(f"  ok  {line}")
+    return problems, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--summary", default=os.path.join(REPO, "bench_out", "summary.json"))
+    ap.add_argument("--baseline", default=os.path.join(REPO, "benchmarks", "baseline.json"))
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed fractional drop vs baseline (default 0.20)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="print problems but exit 0 (the current CI mode)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.summary):
+        print(f"no summary at {args.summary} — run `python -m benchmarks.run` "
+              f"(or --summary-only) first")
+        return 0 if args.warn_only else 2
+    with open(args.summary) as f:
+        summary = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    problems, report = check(summary, baseline, args.threshold)
+    for line in report:
+        print(line)
+    if problems:
+        for p in problems:
+            print(f"  {'WARN' if args.warn_only else 'FAIL'} {p}")
+        print(f"{len(problems)} problem(s) vs {args.baseline}"
+              + (" (warn-only: not failing the build)" if args.warn_only else ""))
+        return 0 if args.warn_only else 1
+    print(f"regression gate OK: {len(report)} metric(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

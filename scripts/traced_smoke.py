@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Traced smoke solve: the observability acceptance gate (DESIGN.md §8).
+
+Runs a coalescing-session chain population through the batched engine with
+the tracer active, then checks:
+
+  1. the exported Chrome trace is valid JSON in trace-event format;
+  2. the recorded spans account for >= 90% of the traced wall time, split
+     into named stages — so the session-vs-direct throughput gap
+     (bench_session's ~0.65x) is attributable to a named span, not a
+     mystery;
+  3. (informational) enabled-metrics overhead vs a NullRegistry run — the
+     <= 5% budget from the PR-6 acceptance criteria.
+
+Writes bench_out/session.trace.json (open in chrome://tracing / Perfetto).
+
+  PYTHONPATH=src python scripts/traced_smoke.py [--n 64] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def make_problems(n: int):
+    import numpy as np
+
+    from repro.api import Problem
+
+    rng = np.random.default_rng(0)
+    probs = []
+    for _ in range(n):
+        m = 3
+        probs.append(Problem(
+            w=rng.uniform(1.0, 3.0, m).tolist(),
+            z=rng.uniform(0.05, 0.3, m - 1).tolist(),
+            v_comm=rng.uniform(0.5, 1.5, 2).tolist(),
+            v_comp=rng.uniform(0.5, 1.5, 2).tolist(),
+        ))
+    return probs
+
+
+def span_accounting(tracer) -> tuple:
+    """(wall_us, accounted_us, per-name totals of the gap-relevant spans).
+
+    Wall time is the root ``session.trace`` span.  "Accounted" sums the
+    spans that partition the work one level below the dispatch boundary:
+    session-side stages (build_requests / make_artifacts / submit) plus the
+    engine's internal stages (cache_lookup / pack / lp_build / simplex /
+    replay / serial_rescue) plus the dispatch time NOT inside the engine
+    (backend call overhead) — i.e. every microsecond lands in exactly one
+    named stage.
+    """
+    wall = tracer.total_us("session.trace")
+    t = tracer.total_us
+    engine_stages = {
+        "engine.cache_lookup": t("engine.cache_lookup"),
+        "engine.pack": t("engine.pack"),
+        "engine.lp_build": t("engine.lp_build"),
+        "engine.simplex": t("engine.simplex"),
+        "engine.replay": t("engine.replay"),
+        "engine.serial_rescue": t("engine.serial_rescue"),
+    }
+    # engine time not in a named stage (bucket scatter, certification, ...)
+    engine_other = max(0.0, t("engine.solve_bulk") - sum(engine_stages.values()))
+    session_stages = {
+        "session.build_requests": t("session.build_requests"),
+        "session.make_artifacts": t("session.make_artifacts"),
+        "session.submit": t("session.submit"),
+    }
+    dispatch_overhead = max(0.0, t("session.dispatch") - t("engine.solve_bulk"))
+    solve_bulk_other = max(0.0, t("session.solve_bulk")
+                           - sum(session_stages.values()) - t("session.dispatch"))
+    stages = dict(engine_stages)
+    stages["engine.other"] = engine_other
+    stages.update(session_stages)
+    stages["session.dispatch_overhead"] = dispatch_overhead
+    stages["session.other"] = solve_bulk_other
+    accounted = sum(stages.values())
+    return wall, accounted, stages
+
+
+def validate_chrome_trace(path: str) -> list:
+    errs = []
+    with open(path) as f:
+        d = json.load(f)  # raises on invalid JSON
+    ev = d.get("traceEvents")
+    if not isinstance(ev, list) or not ev:
+        return ["traceEvents: want a non-empty list"]
+    for e in ev:
+        if e.get("ph") == "X" and not all(k in e for k in ("name", "ts", "dur", "pid", "tid")):
+            errs.append(f"malformed complete event: {e}")
+    if not any(e.get("ph") == "X" for e in ev):
+        errs.append("no complete (ph=X) span events")
+    return errs
+
+
+def metrics_overhead(session_factory, problems, reps: int = 3) -> tuple:
+    """Median solve_bulk wall with the live registry vs a NullRegistry."""
+    from repro.obs import metrics as om
+
+    def run(registry):
+        prev = om.get_registry()
+        om.set_registry(registry)
+        try:
+            s = session_factory()
+            s.solve_bulk(problems)  # warm-up: compile + cache fill
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                s.solve_bulk(problems)
+                times.append(time.perf_counter() - t0)
+            return sorted(times)[len(times) // 2]
+        finally:
+            om.set_registry(prev)
+
+    t_null = run(om.NullRegistry())
+    t_live = run(om.MetricsRegistry())
+    return t_live, t_null
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--out", default=os.path.join(REPO, "bench_out", "session.trace.json"))
+    ap.add_argument("--min-coverage", type=float, default=0.90)
+    args = ap.parse_args(argv)
+
+    from repro.api import Policy, Session
+
+    problems = make_problems(args.n)
+
+    def fresh():
+        return Session(policy=Policy(backend="batched", installments=2))
+
+    session = fresh()
+    session.solve_bulk(problems)  # warm-up: compile every bucket shape
+    with session.trace() as tr:
+        arts = session.solve_bulk(problems)
+    bad = [a for a in arts if not a.ok]
+    print(f"solved {len(arts)} problems ({len(bad)} not optimal) in "
+          f"{tr.total_us('session.trace') / 1e3:.1f}ms traced")
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    tr.save(args.out)
+    errs = validate_chrome_trace(args.out)
+    if errs:
+        print(f"FAIL chrome trace invalid: {errs}")
+        return 1
+    print(f"chrome trace OK: {args.out} ({len(tr)} spans)")
+
+    wall, accounted, stages = span_accounting(tr)
+    coverage = accounted / wall if wall else 0.0
+    print(f"span coverage: {coverage:.1%} of {wall / 1e3:.1f}ms wall")
+    gap = {k: v for k, v in stages.items()
+           if not k.startswith(("engine.lp_build", "engine.simplex", "engine.replay"))}
+    for name, us in sorted(stages.items(), key=lambda kv: -kv[1]):
+        mark = " <- gap" if name in gap and us == max(gap.values()) else ""
+        print(f"  {name:<28} {us / 1e3:8.2f}ms  ({us / wall:6.1%}){mark}")
+    dominant = max(gap, key=gap.get)
+    print(f"dominant session-vs-direct gap contributor: {dominant} "
+          f"({gap[dominant] / wall:.1%} of traced wall)")
+    if coverage < args.min_coverage:
+        print(f"FAIL span coverage {coverage:.1%} < {args.min_coverage:.0%}")
+        return 1
+
+    t_live, t_null = metrics_overhead(fresh, problems)
+    over = (t_live - t_null) / t_null if t_null else 0.0
+    verdict = "within" if over <= 0.05 else "OVER"
+    print(f"metrics overhead: live {t_live * 1e3:.1f}ms vs null {t_null * 1e3:.1f}ms "
+          f"({over:+.1%}, {verdict} the 5% budget; informational — single-box timing)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

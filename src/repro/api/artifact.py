@@ -19,6 +19,15 @@ Versioning rules (DESIGN.md §7):
   ``repr`` (exact round-trip for every finite float64 and for NaN) — so
   ``from_json(s).to_json() == s`` bit-identically, across processes and
   platforms.  Ship it, diff it, replay it.
+
+Version history:
+
+* v1 — decision + provenance (PR 5).
+* v2 — adds ``events`` (structured provenance: what changed hands between
+  the requested and serving backend, and why) and ``telemetry`` (per-stage
+  solve timings + LP/bucket stats from the serving path; DESIGN.md §8).
+  v1 documents still load — their artifacts keep ``version == 1`` and
+  serialize back without the v2 keys, so v1 round-trips stay bit-stable.
 """
 
 from __future__ import annotations
@@ -32,7 +41,7 @@ from .spec import Policy, Problem
 
 __all__ = ["ARTIFACT_VERSION", "PlanArtifact"]
 
-ARTIFACT_VERSION = 1
+ARTIFACT_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -49,10 +58,18 @@ class PlanArtifact:
     status: str  # "optimal" | "infeasible" | "failed" | ...
     backend: str  # label that actually served it (e.g. "batched+cache")
     cache_hit: bool
-    fallback_events: tuple  # e.g. ("served_by:simplex",) — empty when none
+    fallback_events: tuple  # legacy strings, e.g. ("served_by:simplex",)
     n_vars: int
     n_rows: int
     sweep: dict | None = None  # auto-T provenance: qs/makespans/costs/t_star_index
+    # v2: structured provenance events — dicts with at least
+    # {"kind": "fallback"|"degrade"|"serial-rescue"|"rescue"|"error",
+    #  "backend": str, "reason": str} (error events add "error_type" and
+    #  "error_chain"); supersedes the fallback_events strings (kept as shims)
+    events: tuple = ()
+    # v2: per-stage solve timings + LP/bucket stats from the serving path
+    # (JSON-safe dict, see DESIGN.md §8); None on paths that record none
+    telemetry: dict | None = None
     version: int = ARTIFACT_VERSION
     # live-solve conveniences, never serialized: the underlying SolveReport
     # (carries the already-replayed Schedule) and the per-rung sweep reports
@@ -126,7 +143,7 @@ class PlanArtifact:
 
     def to_dict(self) -> dict:
         p = self.problem
-        return {
+        out = {
             "version": self.version,
             "problem": {
                 "topology": p.topology,
@@ -174,6 +191,12 @@ class PlanArtifact:
             "n_rows": self.n_rows,
             "sweep": self.sweep,
         }
+        if self.version >= 2:
+            # v1 artifacts (deserialized old documents) keep their exact
+            # key set so the v1 round-trip stays bit-stable
+            out["events"] = [dict(e) for e in self.events]
+            out["telemetry"] = self.telemetry
+        return out
 
     def to_json(self) -> str:
         """Canonical JSON: sorted keys, fixed separators, repr floats."""
@@ -183,10 +206,10 @@ class PlanArtifact:
     @classmethod
     def from_dict(cls, d: dict) -> "PlanArtifact":
         version = d.get("version")
-        if version != ARTIFACT_VERSION:
+        if version not in (1, ARTIFACT_VERSION):
             raise ValueError(
                 f"unknown PlanArtifact version {version!r} "
-                f"(this build reads version {ARTIFACT_VERSION})"
+                f"(this build reads versions 1..{ARTIFACT_VERSION})"
             )
         pd = d["problem"]
         problem = Problem(
@@ -232,6 +255,8 @@ class PlanArtifact:
             n_vars=int(d["n_vars"]),
             n_rows=int(d["n_rows"]),
             sweep=d["sweep"],
+            events=tuple(dict(e) for e in d.get("events") or ()),
+            telemetry=d.get("telemetry"),
             version=int(version),
         )
 

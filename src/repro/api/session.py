@@ -41,6 +41,7 @@ API call after it expires (and ``result()`` always resolves immediately).
 
 from __future__ import annotations
 
+import contextlib
 import copy
 import dataclasses
 import time
@@ -49,6 +50,8 @@ import numpy as np
 
 from repro.core.backends import SolveRequest, get_backend
 from repro.core.instance import Instance
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from .artifact import PlanArtifact
 from .spec import Policy, Problem
@@ -58,6 +61,22 @@ __all__ = ["Session", "PlanTicket"]
 # backends that consult the session's solution cache; resolved lazily so the
 # cache (and with it the engine) is only constructed when actually needed
 _ENGINE_BACKENDS = ("batched", "pallas")
+
+# the serial-solver family: a bulk engine backend landing on one of these
+# labels means the batched path handed the element to the per-instance
+# reference solver (a "serial-rescue" provenance event)
+_SERIAL_LABELS = ("auto", "serial", "simplex", "scipy", "simplex+scipy")
+
+
+def _truncate_words(s: str, limit: int = 500) -> str:
+    """Bound provenance strings without cutting mid-word (or mid-class-name)."""
+    if len(s) <= limit:
+        return s
+    cut = s[:limit]
+    sp = cut.rfind(" ")
+    if sp > limit // 2:  # a word boundary near the limit: break there
+        cut = cut[:sp]
+    return cut + " ...[truncated]"
 
 
 class PlanTicket:
@@ -138,7 +157,13 @@ class Session:
     ``PlanService`` behavior).
     """
 
-    def __init__(self, policy: Policy | None = None, cache=None, max_batch: int | None = 64):
+    def __init__(
+        self,
+        policy: Policy | None = None,
+        cache=None,
+        max_batch: int | None = 64,
+        metrics=None,
+    ):
         self.policy = policy if policy is not None else Policy()
         if max_batch is not None and max_batch < 1:
             raise ValueError("max_batch must be >= 1 (or None to disable)")
@@ -150,6 +175,41 @@ class Session:
         self._next_deadline: float | None = None  # earliest absolute deadline queued
         self._seq = 0
         self.flush_count = 0  # completed (non-empty) flushes, for coalescing tests
+        self._metrics = metrics  # None -> follow the process registry
+
+    @property
+    def metrics(self):
+        """The metrics registry this session records into.
+
+        An explicit ``metrics=`` pins one (isolation for tests/benchmarks);
+        the default follows the process registry, so a later
+        :func:`repro.obs.metrics.set_registry` takes effect immediately.
+        """
+        return self._metrics if self._metrics is not None else obs_metrics.get_registry()
+
+    # ---------------- observability ----------------
+
+    @contextlib.contextmanager
+    def trace(self, tracer: obs_trace.Tracer | None = None):
+        """Record spans for everything this session does inside the block.
+
+        Activates ``tracer`` (a fresh one by default) process-wide for the
+        duration, opens a ``session.trace`` root span, and restores the
+        previous tracer on exit.  Yields the tracer; export with
+        ``tracer.save(path)`` (Chrome trace-event JSON — load in
+        ``chrome://tracing`` or Perfetto) or inspect ``tracer.events()``::
+
+            with session.trace() as tr:
+                session.solve_bulk(problems)
+            tr.save("bench_out/session.trace.json")
+        """
+        tracer = tracer if tracer is not None else obs_trace.Tracer()
+        prev = obs_trace.activate(tracer)
+        try:
+            with obs_trace.span("session.trace"):
+                yield tracer
+        finally:
+            obs_trace.activate(prev)
 
     # ---------------- cache / backend plumbing ----------------
 
@@ -253,11 +313,12 @@ class Session:
         """
         self._flush_expired()  # synchronous traffic still honors queued deadlines
         policy = policy if policy is not None else self.policy
-        work = [
-            self._make_pending(p, policy, backend, seq=-1, priority=0, deadline=None)
-            for p in problems
-        ]
-        self._solve_pending(work)
+        with obs_trace.span("session.solve_bulk", n=len(problems)):
+            work = [
+                self._make_pending(p, policy, backend, seq=-1, priority=0, deadline=None)
+                for p in problems
+            ]
+            self._solve_pending(work)
         return [w.ticket._artifact for w in work]
 
     def evaluate_gammas(self, instances, gammas, use_batched: bool = True) -> np.ndarray:
@@ -307,10 +368,12 @@ class Session:
         poisoned by someone else's bad submit.
         """
         abs_deadline = None if deadline is None else time.monotonic() + float(deadline)
-        p = self._make_pending(
-            problem, policy if policy is not None else self.policy, backend,
-            seq=self._seq, priority=int(priority), deadline=abs_deadline,
-        )
+        with obs_trace.span("session.submit", priority=int(priority)):
+            p = self._make_pending(
+                problem, policy if policy is not None else self.policy, backend,
+                seq=self._seq, priority=int(priority), deadline=abs_deadline,
+            )
+        self.metrics.inc("repro_session_submits_total")
         self._pending.append(p)
         self._seq += 1
         if abs_deadline is not None and (
@@ -353,7 +416,8 @@ class Session:
         batch, self._pending = self._pending, []
         self._next_deadline = None
         try:
-            self._solve_pending(sorted(batch, key=lambda p: (-p.priority, p.seq)))
+            with obs_trace.span("session.flush", n=len(batch)):
+                self._solve_pending(sorted(batch, key=lambda p: (-p.priority, p.seq)))
         except BaseException:
             # backstop (solver errors are handled per group): re-queue
             # whatever was left unresolved so no ticket is ever lost
@@ -363,6 +427,7 @@ class Session:
             self._recompute_deadline()
             raise
         self.flush_count += 1
+        self.metrics.inc("repro_session_flushes_total")
         return [p.ticket._artifact for p in batch]
 
     def _flush_expired(self) -> None:
@@ -377,6 +442,15 @@ class Session:
     # ---------------- stats ----------------
 
     def stats(self) -> dict:
+        """Session counters in the historical dict shape.
+
+        .. deprecated:: PR 6
+           A shim — the unified, cross-component view is the metrics
+           registry (``repro_session_*`` / ``repro_cache_*``; key schema in
+           DESIGN.md §8): ``session.metrics.snapshot()``.  The dict shape
+           is frozen for old call sites; new keys are appended, never
+           renamed.
+        """
         out = {
             "pending": len(self._pending),
             "flushes": self.flush_count,
@@ -428,29 +502,36 @@ class Session:
         error re-raises once every ticket is resolved.
         """
         groups: dict = {}  # id(handle) -> (handle, [(pending, [requests])])
-        for p in work:
-            reqs = [
-                SolveRequest(
-                    instance=p.problem.to_instance(q),
-                    objective=p.policy.objective,
-                    weights=p.policy.weights,
-                    beta=p.policy.beta,
-                    cross_check=p.policy.cross_check,
-                    validate=p.policy.validate,
-                )
-                for q in p.policy.q_candidates(p.problem)
-            ]
-            groups.setdefault(id(p.handle), (p.handle, []))[1].append((p, reqs))
+        with obs_trace.span("session.build_requests", n=len(work)):
+            for p in work:
+                reqs = [
+                    SolveRequest(
+                        instance=p.problem.to_instance(q),
+                        objective=p.policy.objective,
+                        weights=p.policy.weights,
+                        beta=p.policy.beta,
+                        cross_check=p.policy.cross_check,
+                        validate=p.policy.validate,
+                    )
+                    for q in p.policy.q_candidates(p.problem)
+                ]
+                groups.setdefault(id(p.handle), (p.handle, []))[1].append((p, reqs))
         first_error: BaseException | None = None
         for handle, items in groups.values():
             flat = [r for _, reqs in items for r in reqs]
             try:
-                reports = handle.solve_many(flat)
-                k = 0
-                for p, reqs in items:
-                    chunk = reports[k : k + len(reqs)]
-                    k += len(reqs)
-                    p.ticket._artifact = self._reduce(p, reqs, chunk)
+                with obs_trace.span(
+                    "session.dispatch",
+                    backend=getattr(handle, "name", type(handle).__name__),
+                    n=len(flat),
+                ):
+                    reports = handle.solve_many(flat)
+                with obs_trace.span("session.make_artifacts", n=len(flat)):
+                    k = 0
+                    for p, reqs in items:
+                        chunk = reports[k : k + len(reqs)]
+                        k += len(reqs)
+                        p.ticket._artifact = self._reduce(p, reqs, chunk)
             except Exception as e:
                 # solver errors only — KeyboardInterrupt/SystemExit propagate
                 # immediately (flush's backstop re-queues unresolved tickets)
@@ -491,9 +572,40 @@ class Session:
         }
         return self._artifact(p, t_star, reports[k], sweep=sweep, sweep_reports=reports)
 
+    @staticmethod
+    def _requested_backend(p: _Pending) -> str:
+        """The backend name the caller asked for (override included)."""
+        if p.backend_override is None:
+            return p.policy.backend
+        return getattr(p.backend_override, "name", type(p.backend_override).__name__)
+
     def _failed_artifact(self, p: _Pending, req: SolveRequest, error: BaseException) -> PlanArtifact:
         """A resolved-but-failed artifact for a group whose backend raised —
-        the ticket holds the error provenance instead of wedging the queue."""
+        the ticket holds the error provenance instead of wedging the queue.
+
+        The exception class survives verbatim (it is its own event field,
+        never part of the truncated message), the cause chain is recorded
+        class-by-class, and the message truncates at a word boundary — the
+        historical ``str(event)[:200]`` cut mid-word and could swallow the
+        class of a nested fallback's root cause entirely.
+        """
+        requested = self._requested_backend(p)
+        chain, seen = [], set()
+        e: BaseException | None = error
+        while e is not None and id(e) not in seen:
+            seen.add(id(e))
+            chain.append(type(e).__name__)
+            e = e.__cause__ if e.__cause__ is not None else e.__context__
+        reason = _truncate_words(str(error))
+        event = {
+            "kind": "error",
+            "backend": requested,
+            "reason": reason,
+            "error_type": type(error).__name__,
+            "error_chain": chain,
+        }
+        self.metrics.inc("repro_session_errors_total", backend=requested)
+        self.metrics.inc("repro_session_events_total", kind="error")
         q = tuple(int(x) for x in req.instance.q)
         return PlanArtifact(
             problem=p.problem,
@@ -504,9 +616,10 @@ class Session:
             lp_makespan=float("nan"),
             objective_value=float("nan"),
             status="error",
-            backend=p.policy.backend,
+            backend=requested,
             cache_hit=False,
-            fallback_events=(f"error:{type(error).__name__}: {error}"[:200],),
+            fallback_events=(f"error:{type(error).__name__}: {reason}",),
+            events=(event,),
             n_vars=-1,
             n_rows=-1,
         )
@@ -514,20 +627,34 @@ class Session:
     def _artifact(self, p: _Pending, q: tuple, report, sweep, sweep_reports) -> PlanArtifact:
         label = report.backend
         cache_hit = label.endswith("+cache")
-        requested = (
-            p.policy.backend
-            if p.backend_override is None
-            else getattr(p.backend_override, "name", type(p.backend_override).__name__)
-        )
+        requested = self._requested_backend(p)
         base = label[: -len("+cache")] if cache_hit else label
         # "auto"/"serial" delegate by design — any serial label matches them;
         # everything else that changed hands is provenance worth recording
         # (engine fallback to the serial solver, pallas degrading to batched,
         # the simplex's scipy rescue, ...)
+        telemetry = getattr(report, "telemetry", None)
         if requested in ("auto", "serial") or base == requested:
+            legacy: tuple = ()
             events: tuple = ()
         else:
-            events = (f"served_by:{base}",)
+            legacy = (f"served_by:{base}",)
+            # classify WHY the serving backend differs from the requested one
+            if requested == "pallas" and base in ("batched", "batched+serial"):
+                kind = "degrade"  # fused kernels unavailable/inapplicable here
+            elif requested in _ENGINE_BACKENDS and base in _SERIAL_LABELS:
+                kind = "serial-rescue"  # bulk path certified this element serially
+            elif base.startswith(requested + "+"):
+                kind = "rescue"  # e.g. simplex+scipy: numerical rescue mid-solve
+            else:
+                kind = "fallback"
+            reason = ""
+            if telemetry is not None:
+                rescue = telemetry.get("serial_rescue")
+                if rescue is not None:
+                    reason = str(rescue.get("reason", ""))
+            events = ({"kind": kind, "backend": base, "reason": reason},)
+            self.metrics.inc("repro_session_events_total", kind=kind)
         if report.ok:
             gamma = np.asarray(report.schedule.gamma, dtype=np.float64)
         else:
@@ -549,7 +676,9 @@ class Session:
             status=report.status,
             backend=label,
             cache_hit=cache_hit,
-            fallback_events=events,
+            fallback_events=legacy,
+            events=events,
+            telemetry=telemetry,
             n_vars=report.n_vars,
             n_rows=report.n_rows,
             sweep=sweep,

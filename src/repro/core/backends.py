@@ -84,6 +84,10 @@ class LPResult:
     status: str
     n_vars: int
     n_rows: int
+    # solver telemetry (DESIGN.md §8): per-stage timings + LP/bucket stats
+    # gathered by the serving path; None on paths that don't record any.
+    # JSON-safe by construction (str keys, float/int/str/list leaves).
+    telemetry: dict | None = dataclasses.field(default=None, compare=False)
 
     @property
     def ok(self) -> bool:
@@ -125,6 +129,7 @@ class SolveReport(LPResult):
             status=res.status,
             n_vars=res.n_vars,
             n_rows=res.n_rows,
+            telemetry=res.telemetry,
             request=request,
         )
 

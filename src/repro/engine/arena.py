@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.instance import Instance
 from repro.core.keys import instance_bucket_key
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["PackedBucket", "InstanceArena", "pack_instances"]
 
@@ -183,6 +184,18 @@ def pack_instances(instances: list, pad_shapes: bool = False) -> list:
                 **stack,
             )
         )
+        # padded-cell fraction of the [B, m_pad, T_pad] arrays this bucket
+        # ships to the device — the shape-ladder cost the metrics surface
+        # (0.0 for the exact LP buckets, which never pad)
+        waste = 1.0 - (m_real * T_real) / (m_pad * T_pad)
+        met = obs_metrics.get_registry()
+        met.set_gauge("repro_engine_bucket_padding_waste_ratio", waste,
+                      topology=topology, m=m_real, T=T_real,
+                      m_pad=m_pad, T_pad=T_pad)
+        met.inc("repro_engine_bucket_packs_total", topology=topology,
+                padded=str(bool(pad_shapes)).lower())
+        met.inc("repro_engine_bucket_elements_total", len(members),
+                topology=topology)
     return buckets
 
 

@@ -66,7 +66,9 @@ class BatchedSimplexResult:
     x: np.ndarray  # [B, n]
     objective: np.ndarray  # [B]
     status: np.ndarray  # [B] int — see STATUS
-    iterations: np.ndarray  # [B] int
+    iterations: np.ndarray  # [B] int (phase 1 + phase 2 pivots)
+    iterations_phase1: np.ndarray | None = None  # [B] int — solver telemetry
+    iterations_phase2: np.ndarray | None = None  # [B] int
 
     @property
     def ok(self) -> np.ndarray:
@@ -223,7 +225,7 @@ def _between_phases(T, basis, st1, c_scaled, *, n, dummy):
 
 
 def _extract_one(T, basis, col_scale, c_orig, infeasible, drivable_leftover,
-                 st1, st2, iters, *, n, dummy):
+                 st1, st2, it1, it2, *, n, dummy):
     m_rows = T.shape[0] - 1
     xfull = jnp.zeros(dummy + 1).at[basis].set(T[:m_rows, -1])
     x = col_scale * xfull[:n]  # undo column scaling
@@ -237,7 +239,7 @@ def _extract_one(T, basis, col_scale, c_orig, infeasible, drivable_leftover,
     bad = (status == 1) | (status == 4)
     x = jnp.where(bad, jnp.nan, x)
     obj = jnp.where(bad, jnp.nan, obj)
-    return x, obj, status, iters
+    return x, obj, status, it1 + it2, it1, it2
 
 
 def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
@@ -252,7 +254,7 @@ def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
         T, basis, st1, c_s, n=n, dummy=dummy)
     T, basis, it2, st2 = _phase(T, basis, dummy, max_iter, bland_after)
     return _extract_one(T, basis, col_scale, c, infeasible, drivable,
-                        st1, st2, it1 + it2, n=n, dummy=dummy)
+                        st1, st2, it1, it2, n=n, dummy=dummy)
 
 
 @partial(jax.jit, static_argnums=(5,))
@@ -314,7 +316,7 @@ def _solve_batch_pallas(c, A_ub, b_ub, A_eq, b_eq, max_iter, interpret):
     T, basis, it2, st2 = _phase_stack(
         T, basis, dummy, max_iter, bland_after, interpret)
     return jax.vmap(partial(_extract_one, n=n, dummy=dummy))(
-        T, basis, col_scale, c, infeasible, drivable, st1, st2, it1 + it2)
+        T, basis, col_scale, c, infeasible, drivable, st1, st2, it1, it2)
 
 
 def solve_simplex_batched(
@@ -346,13 +348,13 @@ def solve_simplex_batched(
         if use_pallas and m_rows > 0:
             from repro.kernels.ops import _interp  # the kernels' TPU gate
 
-            x, obj, status, iters = _solve_batch_pallas(
+            x, obj, status, iters, it1, it2 = _solve_batch_pallas(
                 jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
                 jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
                 _interp(interpret),
             )
         else:
-            x, obj, status, iters = _solve_batch(
+            x, obj, status, iters, it1, it2 = _solve_batch(
                 jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
                 jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
             )
@@ -361,4 +363,6 @@ def solve_simplex_batched(
             objective=np.asarray(obj),
             status=np.asarray(status),
             iterations=np.asarray(iters),
+            iterations_phase1=np.asarray(it1),
+            iterations_phase2=np.asarray(it2),
         )

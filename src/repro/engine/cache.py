@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.instance import Instance
 from repro.core.keys import instance_content_key
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["instance_key", "CachedSolution", "SolutionCache"]
 
@@ -46,6 +47,7 @@ class SolutionCache:
         self._store: dict[str, CachedSolution] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -57,8 +59,10 @@ class SolutionCache:
         sol = self._store.get(key)
         if sol is None:
             self.misses += 1
+            obs_metrics.get_registry().inc("repro_cache_misses_total")
             return None
         self.hits += 1
+        obs_metrics.get_registry().inc("repro_cache_hits_total")
         # LRU touch: re-insert to the dict tail (dicts are insertion-ordered)
         del self._store[key]
         self._store[key] = sol
@@ -70,8 +74,18 @@ class SolutionCache:
         self._store[key] = sol
         while len(self._store) > self.max_entries:
             self._store.pop(next(iter(self._store)))
+            self.evictions += 1
+            obs_metrics.get_registry().inc("repro_cache_evictions_total")
 
     def stats(self) -> dict:
+        """Per-cache counters in the historical dict shape.
+
+        .. deprecated:: PR 6
+           A shim — the unified, cross-component view is the metrics
+           registry (``repro_cache_*_total``; key schema in DESIGN.md §8).
+           The dict shape is frozen for the old call sites; new keys are
+           appended, never renamed.
+        """
         total = self.hits + self.misses
         return {
             "entries": len(self._store),

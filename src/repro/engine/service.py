@@ -22,6 +22,7 @@ call-sites (launch/serve.py --plan, runtime replans).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -30,11 +31,13 @@ from repro.core.instance import Instance
 from repro.core.schedule import Schedule
 from repro.core.simulator import simulate
 from repro.core.solver import LPResult, solve
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span
 
 from .arena import InstanceArena
 from .batched_lp import build_lp_bucket
 from .batched_sim import simulate_bucket
-from .batched_simplex import solve_simplex_batched
+from .batched_simplex import STATUS, solve_simplex_batched
 from .cache import CachedSolution, SolutionCache
 
 __all__ = ["solve_bulk", "BatchedBackend", "PallasBackend", "PlanService"]
@@ -83,38 +86,106 @@ def solve_bulk(
     if objective != "makespan":
         return [solve(inst, objective=objective, validate=validate) for inst in instances]
 
-    results: list = [None] * len(instances)
-    keys: list = [None] * len(instances)
-    pending: list[int] = []
-    for i, inst in enumerate(instances):
-        if cache is not None:
-            keys[i] = cache.key(inst, objective)
-            sol = cache.get(keys[i])
-            if sol is not None:
-                results[i] = _result_from_gamma(
-                    inst, sol.gamma, sol.lp_makespan, label + "+cache"
-                )
-                continue
-        pending.append(i)
-    if not pending:
-        return results
+    met = obs_metrics.get_registry()
+    met.inc("repro_engine_bulk_solves_total", path=label)
+    with span("engine.solve_bulk", n=len(instances), path=label):
+        results: list = [None] * len(instances)
+        keys: list = [None] * len(instances)
+        pending: list[int] = []
+        hit_idx: list[int] = []
+        t0 = time.perf_counter()
+        with span("engine.cache_lookup", n=len(instances)):
+            for i, inst in enumerate(instances):
+                if cache is not None:
+                    keys[i] = cache.key(inst, objective)
+                    sol = cache.get(keys[i])
+                    if sol is not None:
+                        results[i] = _result_from_gamma(
+                            inst, sol.gamma, sol.lp_makespan, label + "+cache"
+                        )
+                        hit_idx.append(i)
+                        continue
+                pending.append(i)
+        cache_s = time.perf_counter() - t0
+        for i in hit_idx:
+            results[i].telemetry = {
+                "stages": {"cache_lookup_s": cache_s},
+                "cache_hit": True,
+            }
+        if not pending:
+            return results
 
-    arena = InstanceArena([instances[i] for i in pending], pad_shapes=False)
-    for bucket in arena.buckets:
-        B = bucket.B
-        lp = build_lp_bucket(bucket)
-        c = np.tile(lp.c, (B, 1))  # objective pattern is bucket-constant
+        t0 = time.perf_counter()
+        with span("engine.pack", n=len(pending)):
+            arena = InstanceArena([instances[i] for i in pending], pad_shapes=False)
+        pack_s = time.perf_counter() - t0
 
-        res = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq,
-                                    use_pallas=use_pallas)
+        for bucket in arena.buckets:
+            _solve_bucket(bucket, instances, results, keys, pending, cache,
+                          label, use_pallas, fallback, validate, met,
+                          {"cache_lookup_s": cache_s, "pack_s": pack_s})
+    return results
+
+
+def _solve_bucket(bucket, instances, results, keys, pending, cache, label,
+                  use_pallas, fallback, validate, met, shared_stages) -> None:
+    """Solve one packed bucket in place: LP build -> batched simplex ->
+    batched ASAP replay -> certify-or-rescue, with per-stage timings and
+    solver telemetry recorded on every report (DESIGN.md §8)."""
+    B = bucket.B
+    q_label = "-".join(str(int(x)) for x in bucket.q)
+    bucket_t0 = time.perf_counter()
+    with span("engine.bucket", B=B, topology=bucket.topology,
+              m=bucket.m_real, T=bucket.T_real, q=q_label):
+        t0 = time.perf_counter()
+        with span("engine.lp_build", B=B):
+            lp = build_lp_bucket(bucket)
+            c = np.tile(lp.c, (B, 1))  # objective pattern is bucket-constant
+        lp_build_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        with span("engine.simplex", B=B, rows=len(lp.b_ub) + len(lp.b_eq)):
+            res = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq,
+                                        use_pallas=use_pallas)
+        simplex_s = time.perf_counter() - t0
+        met.inc("repro_simplex_pivots_total",
+                int(res.iterations_phase1.sum()), phase="1", path=label)
+        met.inc("repro_simplex_pivots_total",
+                int(res.iterations_phase2.sum()), phase="2", path=label)
+        for code, count in zip(*np.unique(res.status, return_counts=True)):
+            met.inc("repro_simplex_status_total", int(count),
+                    status=STATUS[int(code)], path=label)
 
         gammas = lp.gamma_of(res.x)
         lp_mks = lp.makespan_of(res.x)
 
         # replay every solved gamma through the batched ASAP simulator
         # (rs/re are None unless the bucket activates the return phase)
-        cs, ce, ps, pe, rs, re, mk = simulate_bucket(
-            bucket, bucket.gamma_padded(list(gammas)), use_pallas=use_pallas)
+        t0 = time.perf_counter()
+        with span("engine.replay", B=B):
+            cs, ce, ps, pe, rs, re, mk = simulate_bucket(
+                bucket, bucket.gamma_padded(list(gammas)), use_pallas=use_pallas)
+        replay_s = time.perf_counter() - t0
+
+        stages = dict(shared_stages, lp_build_s=lp_build_s,
+                      simplex_s=simplex_s, replay_s=replay_s)
+        bucket_info = {"B": B, "topology": bucket.topology,
+                       "m": bucket.m_real, "T": bucket.T_real,
+                       "q": [int(x) for x in bucket.q]}
+
+        def telem(b: int, extra: dict | None = None) -> dict:
+            out = {
+                "stages": dict(stages),
+                "bucket": dict(bucket_info),
+                "lp": {
+                    "pivots_phase1": int(res.iterations_phase1[b]),
+                    "pivots_phase2": int(res.iterations_phase2[b]),
+                    "status": res.status_str(b),
+                },
+            }
+            if extra:
+                out.update(extra)
+            return out
 
         for b in range(B):
             gi = pending[bucket.indices[b]]
@@ -130,7 +201,20 @@ def solve_bulk(
                         f"batched solve failed for instance {gi}: "
                         f"status={res.status_str(b)} replay={mk[b]} lp={lp_mks[b]}"
                     )
-                results[gi] = solve(inst, objective="makespan", validate=validate)
+                met.inc("repro_engine_fallback_total", path=label,
+                        reason=res.status_str(b))
+                t0 = time.perf_counter()
+                with span("engine.serial_rescue", index=gi,
+                          status=res.status_str(b)):
+                    results[gi] = solve(inst, objective="makespan",
+                                        validate=validate)
+                results[gi].telemetry = telem(b, {
+                    "serial_rescue": {
+                        "reason": res.status_str(b),
+                        "seconds": time.perf_counter() - t0,
+                        "backend": results[gi].backend,
+                    },
+                })
                 if cache is not None and results[gi].ok:
                     cache.put(keys[gi], CachedSolution(
                         gamma=results[gi].schedule.gamma,
@@ -152,11 +236,18 @@ def solve_bulk(
             results[gi] = _result_from_gamma(
                 inst, gammas[b], lp_mks[b], label, sched=sched
             )
+            results[gi].telemetry = telem(b)
             if cache is not None:
                 cache.put(keys[gi], CachedSolution(
                     gamma=gammas[b], lp_makespan=float(lp_mks[b]), backend=label
                 ))
-    return results
+    bucket_s = time.perf_counter() - bucket_t0
+    met.observe("repro_engine_bucket_solve_seconds", bucket_s,
+                topology=bucket.topology, m=bucket.m_real, T=bucket.T_real,
+                q=q_label, path=label)
+    for stage, dt in (("lp_build", lp_build_s), ("simplex", simplex_s),
+                      ("replay", replay_s)):
+        met.observe("repro_engine_stage_seconds", dt, stage=stage, path=label)
 
 
 class BatchedBackend(SolverBackend):
@@ -176,6 +267,19 @@ class BatchedBackend(SolverBackend):
     def __init__(self, cache: SolutionCache | None = None, fallback: bool = True):
         super().__init__(cache=cache)
         self.fallback = fallback
+
+    def stats(self) -> dict:
+        """Cache stats of this backend's solution cache.
+
+        .. deprecated:: PR 6
+           A shim kept for the historical surface — the unified view is the
+           metrics registry (``repro.obs.metrics.get_registry().snapshot()``,
+           key schema in DESIGN.md §8).
+        """
+        return {
+            "backend": self.name,
+            "cache": self.cache.stats() if self.cache is not None else None,
+        }
 
     @staticmethod
     def _batchable(req: SolveRequest) -> bool:
@@ -231,6 +335,11 @@ class PallasBackend(BatchedBackend):
         from repro.kernels.ops import scheduling_kernels_available
 
         self.use_pallas = scheduling_kernels_available()
+        if not self.use_pallas:
+            obs_metrics.get_registry().inc(
+                "repro_engine_pallas_degrade_total",
+                reason="kernels_unavailable",
+            )
 
 
 @dataclasses.dataclass

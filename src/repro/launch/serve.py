@@ -62,7 +62,44 @@ def main(argv=None):
                     help="fixed per-installment overhead (seconds) charged "
                          "by the --auto-t sweep")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record spans for the whole run (serve + planning) "
+                         "and write Chrome trace-event JSON to PATH — open "
+                         "in chrome://tracing or Perfetto (DESIGN.md §8)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the process metrics registry as Prometheus "
+                         "text on http://localhost:PORT/metrics for the "
+                         "duration of the run")
     args = ap.parse_args(argv)
+
+    # observability surfaces (repro.obs): both are no-cost when unset
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+
+        metrics_server = start_metrics_server(args.metrics_port)
+        # server_address reports the real port even for --metrics-port 0
+        print(f"metrics: http://localhost:{metrics_server.server_address[1]}/metrics")
+    tracer = prev_tracer = None
+    if args.trace_out is not None:
+        from repro.obs import Tracer, activate
+
+        tracer = Tracer()
+        prev_tracer = activate(tracer)
+    try:
+        _run(args)
+    finally:
+        if tracer is not None:
+            from repro.obs import activate
+
+            activate(prev_tracer)
+            tracer.save(args.trace_out)
+            print(f"trace: {args.trace_out} ({len(tracer)} spans)")
+        if metrics_server is not None:
+            metrics_server.shutdown()
+
+
+def _run(args):
 
     cfg = get_arch(args.arch)
     if args.smoke:
