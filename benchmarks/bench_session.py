@@ -32,6 +32,7 @@ CSV: bench_out/session_throughput.csv.
 
 from __future__ import annotations
 
+import gc
 import time
 
 import numpy as np
@@ -65,6 +66,8 @@ def _session_throughput(problems: list, policy) -> tuple:
     warm = Session(policy=policy, max_batch=MAX_BATCH)
     warm.solve_bulk(problems[:MAX_BATCH])  # compile the bucket shapes
     sess = Session(policy=policy, max_batch=MAX_BATCH)
+    gc.collect()  # a pending full collection (other benches' garbage) must
+    # not land inside the timed submit loop — it reads as dispatch overhead
     t0 = time.perf_counter()
     tickets = [sess.submit(p) for p in problems]
     for t in tickets:
@@ -80,6 +83,7 @@ def _direct_throughput(problems: list, policy) -> float:
     sess = Session(policy=policy)
     sess.solve_bulk(problems)  # warm-up: compile the full-population shapes
     sess = Session(policy=policy)  # fresh cache so the timed run really solves
+    gc.collect()
     t0 = time.perf_counter()
     sess.solve_bulk(problems)
     return len(problems) / (time.perf_counter() - t0)

@@ -96,6 +96,19 @@ def bench_metrics(benches: dict) -> dict:
                           float(rec["session_inst_per_sec"]), mix=rec["mix"])
             reg.set_gauge("repro_bench_session_to_direct_ratio",
                           float(rec["session_to_direct_ratio"]), mix=rec["mix"])
+    b = benches.get("hotpath")
+    if b:
+        for row in b["rows"]:
+            rec = dict(zip(b["header"], row))
+            if rec["metric"] == "keys_per_sec":
+                reg.set_gauge("repro_bench_keys_per_sec",
+                              float(rec["value"]), path=rec["label"])
+            elif rec["metric"] == "warm_hit_inst_per_sec":
+                reg.set_gauge("repro_bench_warm_hit_inst_per_sec",
+                              float(rec["value"]), path=rec["label"])
+            elif rec["metric"] == "session_to_direct_ratio":
+                reg.set_gauge("repro_bench_session_to_direct_ratio",
+                              float(rec["value"]), mix=f"hotpath_{rec['label']}")
     return reg.snapshot()
 
 
@@ -181,11 +194,12 @@ def main(argv=None) -> int:
         return 0
     quick = not args.full
     if args.smoke and not args.only:
-        args.only = "engine_throughput,star,kernels,session"
+        args.only = "engine_throughput,star,kernels,session,hotpath"
 
-    from . import (bench_engine_throughput, bench_kernels, bench_latency_qstar,
-                   bench_lp_scaling, bench_motivating_example, bench_session,
-                   bench_star, bench_table2, bench_theorem1, roofline)
+    from . import (bench_engine_throughput, bench_hotpath, bench_kernels,
+                   bench_latency_qstar, bench_lp_scaling,
+                   bench_motivating_example, bench_session, bench_star,
+                   bench_table2, bench_theorem1, roofline)
 
     benches = {
         "motivating_example": bench_motivating_example.main,
@@ -197,6 +211,7 @@ def main(argv=None) -> int:
         "engine_throughput": bench_engine_throughput.main,
         "star": bench_star.main,
         "session": bench_session.main,
+        "hotpath": bench_hotpath.main,
         "roofline_single": lambda quick: roofline.main(quick, mesh="single"),
         "roofline_multi": lambda quick: roofline.main(quick, mesh="multi"),
     }

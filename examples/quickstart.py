@@ -116,15 +116,27 @@ print(f"20 staggered submits -> {st['flushes']} engine flushes "
 print("\n=== the flight recorder: spans + metrics (DESIGN.md §8) ===")
 # session.trace() records spans for everything inside the block; the saved
 # file is Chrome trace-event JSON (open in chrome://tracing or Perfetto)
+burst_probs = [Problem.from_instance(
+    random_instance(rng, m=3, n_loads=2, q=1)) for _ in range(8)]
 with bursty.trace() as tr:
-    bursty.solve_bulk([Problem.from_instance(
-        random_instance(rng, m=3, n_loads=2, q=1)) for _ in range(8)])
+    bursty.solve_bulk(burst_probs)
 stage_us = {n: tr.total_us(n) for n in
             ("engine.lp_build", "engine.simplex", "engine.replay")}
 print(f"traced {len(tr)} spans over {tr.total_us('session.trace')/1e3:.1f}ms: "
       + ", ".join(f"{n.split('.')[1]} {us/1e3:.1f}ms"
                   for n, us in stage_us.items()))
 # tr.save("session.trace.json")  # ship it to chrome://tracing
+
+# re-solving the same problems hits the cache: plans re-materialize through
+# the batched bucket replay (no per-instance Python, no pivots), and the
+# hit artifacts say so — cache_hit + replay-stage seconds (DESIGN.md §9)
+bursty.solve_bulk(burst_probs)  # first hit pass compiles the replay rung
+hit = bursty.solve_bulk(burst_probs)[0]
+print(f"warm re-solve: cache_hit={hit.cache_hit}, backend={hit.backend}, "
+      f"bucket B={hit.telemetry['bucket']['B']} replayed in "
+      f"{hit.telemetry['stages']['replay_s']*1e3:.2f}ms, "
+      f"pivots={hit.telemetry['lp']['pivots_phase1']}"
+      f"+{hit.telemetry['lp']['pivots_phase2']}")
 
 # every solve also feeds the process metrics registry (one key schema for
 # cache/session/engine/simplex; `serve --metrics-port` exposes it to scrapes)

@@ -7,10 +7,12 @@ summary's metrics section: a metric that dropped more than ``--threshold``
 (default 20%) below its baseline fails the gate.  Metrics missing from the
 summary fail too — a silently-skipped bench must not read as a pass.
 
-CI currently runs this ``--warn-only`` (exit 0, problems printed) because
-quick-mode numbers on a shared CI box are noisy; the flip-to-blocking plan
-is in DESIGN.md §8.  Run locally after ``python -m benchmarks.run --full``
-for the real verdict.
+CI runs this twice (DESIGN.md §8): **blocking** against a summary rebuilt
+from the committed bench_out CSVs (the full-scale numbers of record, via
+``benchmarks.run --summary-only``), then ``--warn-only`` (exit 0, problems
+printed) against the live quick-mode smoke numbers, which are noisy on a
+shared runner.  Run locally after ``python -m benchmarks.run --full`` for
+the same verdict the blocking gate gives.
 
   PYTHONPATH=src python scripts/check_regression.py [--warn-only]
 """

@@ -80,26 +80,44 @@ def _truncate_words(s: str, limit: int = 500) -> str:
 
 
 class PlanTicket:
-    """Future-style handle for one submitted problem."""
+    """Future-style handle for one submitted problem.
+
+    Resolution is two-step: a flush *resolves* the ticket by pinning the
+    solved reports on it (cheap — no artifact built yet), and the first
+    ``result()``/``report()`` *materializes* the :class:`PlanArtifact` from
+    them.  Submit-heavy streams that only sample some tickets therefore
+    never pay artifact construction for the rest; error artifacts (a
+    backend that raised mid-flush) are pinned eagerly, so failure
+    provenance is never deferred.
+    """
 
     def __init__(self, session: "Session", seq: int):
         self._session = session
         self._seq = seq
         self._artifact: PlanArtifact | None = None
+        self._payload: tuple | None = None  # (pending, requests, reports)
+
+    def _materialize(self) -> PlanArtifact:
+        if self._artifact is None:
+            assert self._payload is not None, \
+                "flush() must resolve every pending ticket"
+            p, reqs, chunk = self._payload
+            self._artifact = self._session._reduce(p, reqs, chunk)
+            self._payload = None
+        return self._artifact
 
     def done(self) -> bool:
-        """True once the artifact is resolved (checks expired deadlines)."""
+        """True once the ticket is resolved (checks expired deadlines)."""
         self._session._flush_expired()
-        return self._artifact is not None
+        return self._artifact is not None or self._payload is not None
 
     def result(self) -> PlanArtifact:
         """The artifact — auto-flushes the session when still pending."""
-        if self._artifact is None:
+        if self._artifact is None and self._payload is None:
             self._session.flush()
         else:  # resolved tickets still honor other tickets' expired deadlines
             self._session._flush_expired()
-        assert self._artifact is not None, "flush() must resolve every pending ticket"
-        return self._artifact
+        return self._materialize()
 
     def report(self):
         """The underlying :class:`SolveReport`.
@@ -174,6 +192,7 @@ class Session:
         self._pending: list[_Pending] = []
         self._next_deadline: float | None = None  # earliest absolute deadline queued
         self._seq = 0
+        self._unreported_submits = 0  # counted locally, flushed to metrics in batch
         self.flush_count = 0  # completed (non-empty) flushes, for coalescing tests
         self._metrics = metrics  # None -> follow the process registry
 
@@ -319,7 +338,7 @@ class Session:
                 for p in problems
             ]
             self._solve_pending(work)
-        return [w.ticket._artifact for w in work]
+            return [w.ticket._materialize() for w in work]
 
     def evaluate_gammas(self, instances, gammas, use_batched: bool = True) -> np.ndarray:
         """Achieved makespans of explicit fraction assignments (bulk replay).
@@ -373,7 +392,10 @@ class Session:
                 problem, policy if policy is not None else self.policy, backend,
                 seq=self._seq, priority=int(priority), deadline=abs_deadline,
             )
-        self.metrics.inc("repro_session_submits_total")
+        # submit-queue bookkeeping is batched: the submit counter is kept
+        # locally and pushed to the registry once per flush (one labelled-key
+        # format + lock per batch instead of per submit on the serving path)
+        self._unreported_submits += 1
         self._pending.append(p)
         self._seq += 1
         if abs_deadline is not None and (
@@ -415,20 +437,30 @@ class Session:
             return []
         batch, self._pending = self._pending, []
         self._next_deadline = None
+        if self._unreported_submits:
+            self.metrics.inc("repro_session_submits_total", self._unreported_submits)
+            self._unreported_submits = 0
         try:
             with obs_trace.span("session.flush", n=len(batch)):
-                self._solve_pending(sorted(batch, key=lambda p: (-p.priority, p.seq)))
+                # the queue is already in seq order; only sort when some
+                # ticket actually asked for non-default priority
+                if any(p.priority for p in batch):
+                    work = sorted(batch, key=lambda p: (-p.priority, p.seq))
+                else:
+                    work = batch
+                self._solve_pending(work)
         except BaseException:
             # backstop (solver errors are handled per group): re-queue
             # whatever was left unresolved so no ticket is ever lost
             self._pending = [
-                p for p in batch if p.ticket._artifact is None
+                p for p in batch
+                if p.ticket._artifact is None and p.ticket._payload is None
             ] + self._pending
             self._recompute_deadline()
             raise
         self.flush_count += 1
         self.metrics.inc("repro_session_flushes_total")
-        return [p.ticket._artifact for p in batch]
+        return [p.ticket._materialize() for p in batch]
 
     def _flush_expired(self) -> None:
         # O(1) on the hot path: only scan when an armed deadline expired
@@ -527,16 +559,19 @@ class Session:
                 ):
                     reports = handle.solve_many(flat)
                 with obs_trace.span("session.make_artifacts", n=len(flat)):
+                    # resolve lazily: pin the reports; the artifact is built
+                    # at first result()/report() (or at flush()'s return)
                     k = 0
                     for p, reqs in items:
                         chunk = reports[k : k + len(reqs)]
                         k += len(reqs)
-                        p.ticket._artifact = self._reduce(p, reqs, chunk)
+                        p.ticket._payload = (p, reqs, chunk)
             except Exception as e:
                 # solver errors only — KeyboardInterrupt/SystemExit propagate
-                # immediately (flush's backstop re-queues unresolved tickets)
+                # immediately (flush's backstop re-queues unresolved tickets).
+                # Failure artifacts pin eagerly: provenance is never deferred.
                 for p, reqs in items:
-                    if p.ticket._artifact is None:
+                    if p.ticket._artifact is None and p.ticket._payload is None:
                         p.ticket._artifact = self._failed_artifact(p, reqs[0], e)
                 if first_error is None:
                     first_error = e

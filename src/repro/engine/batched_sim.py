@@ -248,16 +248,18 @@ def simulate_bucket(bucket: PackedBucket, gamma: np.ndarray,
     block-resident; results are parity-identical.  The linkless ``m == 1``
     chain keeps the vmapped path (there is nothing to fuse).
     """
-    args_np = (
+    # numpy args go straight into the jitted call: its argument machinery
+    # batches the host->device transfers, where a per-array ``jnp.asarray``
+    # here costs ~100us each — the dominant cost of a small-bucket replay
+    args = (
         bucket.w_cell, bucket.z, bucket.latency, bucket.tau,
         bucket.vcomm_cell, bucket.vcomp_cell, bucket.rel_cell,
     )
     with_ret = bool(bucket.has_returns) and bucket.m > 1
     with enable_x64():
-        args = tuple(jnp.asarray(a) for a in args_np)
-        retr = jnp.asarray(bucket.ret_cell)
-        valid = jnp.asarray(bucket.cell_valid, dtype=jnp.float64)
-        g = jnp.asarray(gamma, dtype=jnp.float64)
+        retr = bucket.ret_cell
+        valid = np.asarray(bucket.cell_valid, dtype=np.float64)
+        g = np.asarray(gamma, dtype=np.float64)
         if use_pallas and bucket.m >= 2:
             from repro.kernels.ops import asap_replay  # deferred kernel import
 

@@ -299,9 +299,13 @@ def _phase_stack(T, basis, ncols_price, max_iter, bland_after, interpret):
 
 @partial(jax.jit, static_argnums=(5, 6))
 def _solve_batch_pallas(c, A_ub, b_ub, A_eq, b_eq, max_iter, interpret):
-    """The fused-kernel twin of ``_solve_batch``: identical setup, inter-phase
-    bookkeeping, and extraction (shared, vmapped), with both pivot phases run
-    by the Pallas kernel over the stacked tableaux."""
+    """The *masked* fused-kernel twin of ``_solve_batch``: identical setup,
+    inter-phase bookkeeping, and extraction (shared, vmapped), with both
+    pivot phases run by the Pallas kernel over the stacked tableaux.  The
+    compaction-epoch driver (``_solve_batch_pallas_compact``) is the
+    production Pallas path; this monolith stays as its parity reference —
+    every lane's pivots are position-independent, so the two are
+    bit-identical (tests/test_hotpath.py)."""
     n = c.shape[1]
     m_ub, m_eq = A_ub.shape[1], A_eq.shape[1]
     m_rows = m_ub + m_eq
@@ -319,20 +323,159 @@ def _solve_batch_pallas(c, A_ub, b_ub, A_eq, b_eq, max_iter, interpret):
         T, basis, col_scale, c, infeasible, drivable, st1, st2, it1, it2)
 
 
+# ---------------------------------------------------------------------------
+# Compaction-epoch Pallas driver
+#
+# The masked driver above pays for its laggards twice: every kernel launch
+# moves the *whole* [B, R, C] stack through the grid even when most lanes
+# have converged, and the while_loop runs until the globally slowest lane
+# finishes.  The compaction driver splits each phase into *epochs*: a bounded
+# burst of fused K-pivot launches (one jitted while_loop segment), then a
+# host-side pass that retires finished lanes into result buffers and gathers
+# the still-active ones into a dense prefix, padded up to a power-of-two
+# rung so the epoch kernel compiles once per rung instead of once per active
+# count.  Lane math is position-independent (grid=(B,) one lane per step),
+# so compacted results are bit-identical to the masked driver's.
+# ---------------------------------------------------------------------------
+
+_setup_batch = jax.jit(jax.vmap(_setup_one))
+
+
+@partial(jax.jit, static_argnames=("n", "dummy"))
+def _between_batch(T, basis, st1, c_s, *, n, dummy):
+    return jax.vmap(partial(_between_phases, n=n, dummy=dummy))(
+        T, basis, st1, c_s)
+
+
+@partial(jax.jit, static_argnames=("n", "dummy"))
+def _extract_batch(T, basis, col_scale, c, infeasible, drivable,
+                   st1, st2, it1, it2, *, n, dummy):
+    return jax.vmap(partial(_extract_one, n=n, dummy=dummy))(
+        T, basis, col_scale, c, infeasible, drivable, st1, st2, it1, it2)
+
+
+@partial(jax.jit, static_argnames=(
+    "ncols_price", "max_iter", "bland_after", "interpret", "k_pivots",
+    "n_launches"))
+def _epoch_stack(T, basis, it, status, *, ncols_price, max_iter, bland_after,
+                 interpret, k_pivots, n_launches):
+    """One epoch: up to ``n_launches`` fused K-pivot launches over the dense
+    active prefix, stopping early when every lane is done."""
+    from repro.kernels.ops import simplex_pivot  # deferred, like _phase_stack
+
+    def cond(carry):
+        _, _, it, status, launch = carry
+        return (launch < n_launches) & jnp.any(
+            (status == _RUNNING) & (it < max_iter))
+
+    def body(carry):
+        T, basis, it, status, launch = carry
+        T, basis, it, status = simplex_pivot(
+            T, basis, it, status, ncols_price=ncols_price,
+            bland_after=bland_after, max_iter=max_iter, k_pivots=k_pivots,
+            interpret=interpret,
+        )
+        return T, basis, it, status, launch + 1
+
+    T, basis, it, status, _ = lax.while_loop(
+        cond, body, (T, basis, it, status, jnp.int32(0)))
+    return T, basis, it, status
+
+
+def _phase_compact(T, basis, ncols_price, max_iter, bland_after, interpret,
+                   k_pivots, n_launches):
+    """Compaction-epoch twin of ``_phase_stack``; same contract, same bits.
+
+    Host buffers hold the full batch; between epochs, finished lanes are
+    scattered back and the survivors gathered into a dense prefix padded to
+    the next power-of-two rung (padding lanes carry status OPTIMAL, so the
+    in-kernel mask makes them identity rides).
+    """
+    B = T.shape[0]
+    Th = np.array(T)  # np.asarray of a device array is a read-only view
+    bh = np.array(basis)
+    ith = np.zeros(B, np.int32)
+    sth = np.full(B, _RUNNING, np.int32)
+    active = np.arange(B)
+
+    while active.size:
+        k = int(active.size)
+        rung = 1 << (k - 1).bit_length()  # next power of two >= k
+        Tp = np.zeros((rung,) + Th.shape[1:], Th.dtype)
+        bp = np.zeros((rung,) + bh.shape[1:], bh.dtype)
+        itp = np.zeros(rung, np.int32)
+        stp = np.full(rung, _OPTIMAL, np.int32)  # padding: masked identity
+        Tp[:k] = Th[active]
+        bp[:k] = bh[active]
+        itp[:k] = ith[active]
+        stp[:k] = sth[active]
+        To, bo, ito, sto = _epoch_stack(
+            Tp, bp, itp, stp, ncols_price=ncols_price, max_iter=max_iter,
+            bland_after=bland_after, interpret=interpret, k_pivots=k_pivots,
+            n_launches=n_launches,
+        )
+        To, bo = np.asarray(To), np.asarray(bo)
+        ito, sto = np.asarray(ito), np.asarray(sto)
+        Th[active] = To[:k]
+        bh[active] = bo[:k]
+        ith[active] = ito[:k]
+        sth[active] = sto[:k]
+        active = active[(sto[:k] == _RUNNING) & (ito[:k] < max_iter)]
+
+    sth = np.where(sth == _RUNNING, np.int32(_ITER_LIMIT), sth)
+    return Th, bh, ith, sth
+
+
+def _solve_batch_pallas_compact(c, A_ub, b_ub, A_eq, b_eq, max_iter,
+                                interpret):
+    """Host-level compaction-epoch driver around the fused K-pivot kernel.
+
+    Setup, inter-phase bookkeeping, and extraction are the same jitted
+    vmapped pieces as the monolithic drivers; only the phase loop differs.
+    (k_pivots, n_launches) come from the per-shape autotune memo.
+    """
+    from repro.engine.autotune import pivot_schedule
+
+    n = c.shape[1]
+    m_ub, m_eq = A_ub.shape[1], A_eq.shape[1]
+    m_rows = m_ub + m_eq
+    dummy = n + m_ub
+    bland_after = max(200, 4 * (m_rows + 1))
+
+    tune = pivot_schedule(m_rows + 1, dummy + 2, interpret)
+    kp, nl = tune["k_pivots"], tune["n_launches"]
+
+    T, basis, c_s, col_scale = _setup_batch(c, A_ub, b_ub, A_eq, b_eq)
+    T, basis, it1, st1 = _phase_compact(
+        T, basis, dummy, max_iter, bland_after, interpret, kp, nl)
+    T, basis, infeasible, drivable = _between_batch(
+        T, basis, st1, c_s, n=n, dummy=dummy)
+    T, basis, it2, st2 = _phase_compact(
+        T, basis, dummy, max_iter, bland_after, interpret, kp, nl)
+    return _extract_batch(
+        T, basis, col_scale, c, infeasible, drivable, st1, st2, it1, it2,
+        n=n, dummy=dummy)
+
+
 def solve_simplex_batched(
     c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, max_iter: int = 20_000,
     use_pallas: bool = False, interpret: bool | None = None,
+    compact: bool | None = None,
 ) -> BatchedSimplexResult:
     """Solve a batch of LPs of identical shape.
 
     Arguments are batched along axis 0: c [B, n], A_ub [B, mu, n], b_ub
     [B, mu], A_eq [B, me, n], b_eq [B, me]; pass None for absent families.
 
-    ``use_pallas=True`` runs both pivot phases through the fused Pallas
-    kernel (repro.kernels.simplex_pivot) over the stacked tableaux; results
-    are identical (parity-tested) — setup, inter-phase bookkeeping, and
-    extraction are shared code.  ``interpret`` follows the kernels' usual
-    gate (None = interpret off-TPU).  LPs with no constraint rows keep the
+    ``use_pallas=True`` runs both pivot phases through the fused K-pivot
+    Pallas kernel (repro.kernels.simplex_pivot) over the stacked tableaux;
+    results are identical (parity-tested) — setup, inter-phase bookkeeping,
+    and extraction are shared code.  ``compact`` selects the
+    compaction-epoch driver (default: on for batches of >= 2 — finished
+    lanes retire between epochs instead of riding every launch masked;
+    ``compact=False`` forces the monolithic masked driver, kept as the
+    parity reference).  ``interpret`` follows the kernels' usual gate
+    (None = interpret off-TPU).  LPs with no constraint rows keep the
     vmapped path (an empty tableau has nothing to fuse).
     """
     c = np.asarray(c, dtype=np.float64)
@@ -344,19 +487,24 @@ def solve_simplex_batched(
     if A_ub.shape[0] != B or A_eq.shape[0] != B:
         raise ValueError("batch dims disagree")
     m_rows = A_ub.shape[1] + A_eq.shape[1]
+    # numpy args go straight into the jitted calls (their argument machinery
+    # batches host->device transfers; explicit per-array jnp.asarray costs
+    # ~100us per array and was a measurable share of small-bucket solves)
     with enable_x64():
         if use_pallas and m_rows > 0:
             from repro.kernels.ops import _interp  # the kernels' TPU gate
 
-            x, obj, status, iters, it1, it2 = _solve_batch_pallas(
-                jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
-                jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
+            if compact is None:
+                compact = B >= 2  # epochs only pay off with lanes to retire
+            driver = (_solve_batch_pallas_compact if compact
+                      else _solve_batch_pallas)
+            x, obj, status, iters, it1, it2 = driver(
+                c, A_ub, b_ub, A_eq, b_eq, int(max_iter),
                 _interp(interpret),
             )
         else:
             x, obj, status, iters, it1, it2 = _solve_batch(
-                jnp.asarray(c), jnp.asarray(A_ub), jnp.asarray(b_ub),
-                jnp.asarray(A_eq), jnp.asarray(b_eq), int(max_iter),
+                c, A_ub, b_ub, A_eq, b_eq, int(max_iter),
             )
         return BatchedSimplexResult(
             x=np.asarray(x),

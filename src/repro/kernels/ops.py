@@ -90,14 +90,16 @@ def rms_norm(x, w, *, eps=1e-5, block_rows=256, interpret=None):
     return rmsnorm_call(x, w, eps=eps, block_rows=block_rows, interpret=_interp(interpret))
 
 
-@partial(jax.jit, static_argnames=("ncols_price", "bland_after", "max_iter", "interpret"))
+@partial(jax.jit, static_argnames=("ncols_price", "bland_after", "max_iter",
+                                   "k_pivots", "interpret"))
 def simplex_pivot(T, basis, it, status, *, ncols_price, bland_after, max_iter,
-                  interpret=None):
-    """One fused masked pivot over a [B, R, C] tableau stack (see
-    simplex_pivot.py); the batched-simplex hot loop calls this per iteration."""
+                  k_pivots=1, interpret=None):
+    """Up to ``k_pivots`` fused masked pivots over a [B, R, C] tableau stack
+    (see simplex_pivot.py); the batched-simplex hot loop calls this per
+    launch, with K chosen by the autotune sweep."""
     return simplex_pivot_call(
         T, basis, it, status, ncols_price=ncols_price, bland_after=bland_after,
-        max_iter=max_iter, interpret=_interp(interpret),
+        max_iter=max_iter, k_pivots=k_pivots, interpret=_interp(interpret),
     )
 
 

@@ -1,5 +1,5 @@
-"""Pallas fused simplex-pivot kernel: one full pivot iteration for a whole
-``[B, R, C]`` tableau stack in a single pass.
+"""Pallas fused simplex-pivot kernel: up to K full pivot iterations for a
+whole ``[B, R, C]`` tableau stack in a single launch.
 
 Per grid step (one batch element, tableau block-resident in VMEM) the kernel
 fuses what the vmapped jnp path runs as separate HBM-roundtripping ops:
@@ -13,9 +13,21 @@ fuses what the vmapped jnp path runs as separate HBM-roundtripping ops:
      carries ``piv - 1`` at the pivot row, so eliminating the column and
      rescaling the pivot row are one pass over the tableau.
 
+``k_pivots`` chains K of these pricing→ratio→update rounds per launch with
+the convergence check *in-kernel* (a ``fori_loop`` whose body re-evaluates
+the active mask each round — the guide-recommended static-bound-plus-mask
+shape): a lane that reaches optimal/unbounded mid-launch passes its
+tableau/basis/counters through the remaining rounds untouched, while the
+launch overhead (grid dispatch + HBM<->VMEM block moves) amortizes over K
+pivots instead of one.  K is a static compile-time parameter; the epoch
+driver in ``repro.engine.batched_simplex`` picks it per tableau shape via
+the autotune sweep (``repro.engine.autotune``).
+
 Finished batch elements (status != running, or out of iteration budget) are
 masked *in-kernel*: their ``pcol'`` is zeroed wholesale, so the rank-1 update
-is the identity and their tableau/basis/counters pass through unchanged.
+is the identity and their tableau/basis/counters pass through unchanged —
+which is also why K fused pivots are bit-identical to K single-pivot
+launches (parity-tested in tests/test_hotpath.py).
 
 Column/row gathers use one-hot contractions (``T @ e_col``, ``e_row @ T``)
 instead of dynamic gathers — MXU-friendly on TPU, and bit-exact (the one-hot
@@ -43,15 +55,9 @@ _OPTIMAL = 0
 _UNBOUNDED = 2
 
 
-def simplex_pivot_kernel(
-    T_ref, basis_ref, it_ref, status_ref,
-    To_ref, basiso_ref, ito_ref, statuso_ref,
-    *, ncols_price: int, bland_after: int, max_iter: int,
-):
-    T = T_ref[0]  # [R, C]: rows = constraints + objective, cols = ... + rhs
-    basis = basis_ref[0]  # [R-1] basic-variable ids
-    it = it_ref[0]
-    status = status_ref[0]
+def _one_pivot(T, basis, it, status, *, ncols_price: int, bland_after: int,
+               max_iter: int):
+    """One masked pricing→ratio→update round (the historical kernel body)."""
     R, C = T.shape
     m_rows = R - 1
     active = (status == _RUNNING) & (it < max_iter)
@@ -90,30 +96,53 @@ def simplex_pivot_kernel(
     full_ridx = jax.lax.broadcasted_iota(jnp.int32, (R, 1), 0)[:, 0]
     pcol = jnp.where(full_ridx == row, piv - 1.0, pcol_full)
     pcol = jnp.where(do_pivot, pcol, 0.0)  # mask finished elements wholesale
-    To_ref[0] = T - pcol[:, None] * prow[None, :]
+    T = T - pcol[:, None] * prow[None, :]
 
-    basiso_ref[0] = jnp.where(
-        do_pivot & (ridx == row), col.astype(basis.dtype), basis
-    )
+    basis = jnp.where(do_pivot & (ridx == row), col.astype(basis.dtype), basis)
     new_status = jnp.where(
         ~any_neg,
         jnp.int32(_OPTIMAL),
         jnp.where(unbounded, jnp.int32(_UNBOUNDED), jnp.int32(_RUNNING)),
     )
-    statuso_ref[0] = jnp.where(active, new_status, status)
-    ito_ref[0] = it + jnp.where(do_pivot, jnp.int32(1), jnp.int32(0))
+    status = jnp.where(active, new_status, status)
+    it = it + jnp.where(do_pivot, jnp.int32(1), jnp.int32(0))
+    return T, basis, it, status
+
+
+def simplex_pivot_kernel(
+    T_ref, basis_ref, it_ref, status_ref,
+    To_ref, basiso_ref, ito_ref, statuso_ref,
+    *, ncols_price: int, bland_after: int, max_iter: int, k_pivots: int = 1,
+):
+    round_ = functools.partial(
+        _one_pivot,
+        ncols_price=ncols_price, bland_after=bland_after, max_iter=max_iter,
+    )
+    carry = (T_ref[0], basis_ref[0], it_ref[0], status_ref[0])
+    if k_pivots == 1:
+        carry = round_(*carry)
+    else:
+        # K fused rounds; the active mask inside round_ is the in-kernel
+        # convergence check (converged lanes ride through as identity)
+        carry = jax.lax.fori_loop(
+            0, k_pivots, lambda _, c: round_(*c), carry
+        )
+    To_ref[0], basiso_ref[0], ito_ref[0], statuso_ref[0] = carry
 
 
 def simplex_pivot_call(
     T, basis, it, status, *,
-    ncols_price: int, bland_after: int, max_iter: int, interpret: bool = False,
+    ncols_price: int, bland_after: int, max_iter: int, k_pivots: int = 1,
+    interpret: bool = False,
 ):
-    """One masked pivot step for the stack: T [B,R,C], basis [B,R-1],
-    it/status [B] int32 -> the same pytree, advanced by <= 1 pivot each."""
+    """Up to ``k_pivots`` masked pivot steps for the stack: T [B,R,C], basis
+    [B,R-1], it/status [B] int32 -> the same pytree, advanced by <= k_pivots
+    pivots each (bit-identical to k_pivots single-pivot calls)."""
     B, R, C = T.shape
     kernel = functools.partial(
         simplex_pivot_kernel,
         ncols_price=ncols_price, bland_after=bland_after, max_iter=max_iter,
+        k_pivots=k_pivots,
     )
     spec_T = pl.BlockSpec((1, R, C), lambda b: (b, 0, 0))
     spec_basis = pl.BlockSpec((1, R - 1), lambda b: (b, 0))
