@@ -1,0 +1,56 @@
+"""Golden-eval campaign as a bench: the paper's §6 claim at scale.
+
+Quick mode runs the smoke tier (256 instances) into
+``bench_out/campaign_smoke.{json,md}``; ``--full`` runs the sweep of record
+(1296 instances) into ``bench_out/campaign.{json,md}`` — the committed
+document ``scripts/check_campaign.py`` gates on.  The split mirrors the CSV
+convention: a laptop/CI smoke run must never overwrite the full-scale
+numbers of record.
+
+Claims: zero anomalies (the hard invariant), plus the headline counts and
+domination rate as informational values.  Throughput lands in the CSV so
+the summary can track campaign cost over time.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.eval import build_document, full_spec, run_campaign, smoke_spec
+from repro.eval.report import write_campaign
+
+from .common import OUT_DIR, banner, write_csv
+
+
+def main(quick: bool = True) -> dict:
+    banner("golden-eval campaign (LP vs §3 heuristics)")
+    spec = smoke_spec() if quick else full_spec()
+    stem = "campaign_smoke" if quick else "campaign"
+
+    t0 = time.time()
+    result = run_campaign(spec, progress=lambda m: print(f"  {m}"))
+    elapsed = time.time() - t0
+
+    doc = build_document(result)
+    write_campaign(doc, os.path.join(OUT_DIR, f"{stem}.json"),
+                   os.path.join(OUT_DIR, f"{stem}.md"))
+
+    counts = result.counts()
+    rows = [[spec.name, result.n, counts.get("lp-wins", 0),
+             counts.get("tie", 0), counts.get("heuristic-infeasible", 0),
+             counts.get("lp-fallback", 0), counts.get("anomaly", 0),
+             f"{result.domination_rate:.6f}", f"{result.n / elapsed:.1f}"]]
+    write_csv(f"{stem}_throughput.csv", rows,
+              ["tier", "n", "lp_wins", "tie", "heuristic_infeasible",
+               "lp_fallback", "anomaly", "domination_rate", "inst_per_sec"])
+
+    print(f"  {result.n} instances in {elapsed:.1f}s "
+          f"({result.n / elapsed:.1f} inst/s): {counts}")
+    return {
+        "zero_anomalies": len(result.anomalies) == 0,
+        "n_instances": result.n,
+        "domination_rate": result.domination_rate,
+        "lp_wins": counts.get("lp-wins", 0),
+        "ties": counts.get("tie", 0),
+    }

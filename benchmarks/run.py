@@ -196,8 +196,8 @@ def main(argv=None) -> int:
     if args.smoke and not args.only:
         args.only = "engine_throughput,star,kernels,session,hotpath"
 
-    from . import (bench_engine_throughput, bench_hotpath, bench_kernels,
-                   bench_latency_qstar, bench_lp_scaling,
+    from . import (bench_campaign, bench_engine_throughput, bench_hotpath,
+                   bench_kernels, bench_latency_qstar, bench_lp_scaling,
                    bench_motivating_example, bench_session, bench_star,
                    bench_table2, bench_theorem1, roofline)
 
@@ -212,6 +212,9 @@ def main(argv=None) -> int:
         "star": bench_star.main,
         "session": bench_session.main,
         "hotpath": bench_hotpath.main,
+        # not in the --smoke only-list: CI gives the campaign its own
+        # dedicated step (python -m repro.eval --smoke + check_campaign.py)
+        "campaign": bench_campaign.main,
         "roofline_single": lambda quick: roofline.main(quick, mesh="single"),
         "roofline_multi": lambda quick: roofline.main(quick, mesh="multi"),
     }

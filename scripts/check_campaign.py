@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Domination gate over a campaign document (DESIGN.md §10).
+
+Validates ``bench_out/campaign.json`` structurally
+(:func:`repro.eval.report.validate_campaign`), then enforces the paper's
+invariant against ``benchmarks/campaign_baseline.json``:
+
+* **anomalies must be zero** — a heuristic beating the LP (at the
+  heuristic's own installment structure) or an LP failure on a feasible
+  instance is always a hard failure, in every mode;
+* **the domination rate may not drop** below the baseline's (exact: the
+  rate is 1 - anomalies/n, so any anomaly already fails the first check —
+  the baseline comparison is the belt to that suspenders, and catches a
+  baseline/doc mismatch);
+* spec seed + tier recorded in the baseline must match the document, so
+  the gate never silently compares different sweeps.
+
+CI runs this twice, mirroring the §9 bench gate: **blocking** against the
+committed ``bench_out/campaign.json`` (the full-sweep numbers of record),
+then against a live ``--smoke`` run with ``--warn-only-domination`` (the
+anomaly check still blocks; the rate comparison warns for one PR while the
+smoke tier collects history — flip plan in DESIGN.md §10).
+
+  PYTHONPATH=src python scripts/check_campaign.py [--campaign PATH]
+  PYTHONPATH=src python scripts/check_campaign.py --write-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+BASELINE_KEYS = ("schema_version", "name", "seed", "n", "counts",
+                 "domination_rate")
+
+
+def distill(doc: dict) -> dict:
+    """The baseline is the campaign's headline, not the whole document."""
+    totals = doc["totals"]
+    return {
+        "schema_version": doc["schema_version"],
+        "name": doc["spec"]["name"],
+        "seed": doc["spec"]["seed"],
+        "n": totals["n"],
+        "counts": totals["counts"],
+        "domination_rate": totals["domination_rate"],
+    }
+
+
+def check(doc: dict, baseline: dict, *, warn_only_domination: bool = False,
+          smoke: bool = False) -> tuple:
+    """Returns (problems, warnings, report_lines)."""
+    from repro.eval.report import validate_campaign
+
+    problems = [f"campaign document: {e}" for e in validate_campaign(doc)]
+    warnings: list = []
+    report: list = []
+    if problems:
+        return problems, warnings, report
+
+    totals = doc["totals"]
+    n_anom = totals["counts"]["anomaly"]
+    report.append(f"  instances: {totals['n']}  anomalies: {n_anom}  "
+                  f"domination_rate: {totals['domination_rate']:.6f}")
+    if n_anom > 0:
+        for a in doc["anomalies"][:5]:
+            problems.append(
+                f"anomaly [{(a.get('anomaly') or {}).get('kind', '?')}] at "
+                f"{a['cell_id']} index {a['index']} key {a['content_key']}"
+            )
+        problems.append(f"{n_anom} anomaly(ies) — the domination invariant broke")
+
+    missing = [k for k in BASELINE_KEYS if k not in baseline]
+    if missing:
+        problems.append(f"baseline missing keys: {missing}")
+        return problems, warnings, report
+
+    # the smoke tier compares rates against the full-sweep baseline but not
+    # identity (different spec by design); the blocking run compares both
+    if not smoke:
+        for key in ("schema_version", "name", "seed", "n"):
+            doc_val = _ident(doc, key)
+            if doc_val != baseline[key]:
+                problems.append(
+                    f"baseline/document mismatch on {key}: "
+                    f"{doc_val!r} != {baseline[key]!r}"
+                )
+
+    rate = totals["domination_rate"]
+    floor = baseline["domination_rate"]
+    line = f"domination_rate {rate:.6f} vs baseline {floor:.6f}"
+    if rate < floor:
+        (warnings if warn_only_domination else problems).append(
+            f"domination rate dropped: {line}"
+        )
+    else:
+        report.append(f"  ok  {line}")
+    return problems, warnings, report
+
+
+def _ident(doc: dict, key: str):
+    if key == "schema_version":
+        return doc["schema_version"]
+    if key in ("name", "seed"):
+        return doc["spec"][key]
+    return doc["totals"]["n"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--campaign",
+                    default=os.path.join(REPO, "bench_out", "campaign.json"))
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "benchmarks",
+                                         "campaign_baseline.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="checking a smoke-tier document: skip the "
+                         "baseline-identity comparison (tier/seed/n differ "
+                         "from the full sweep by design)")
+    ap.add_argument("--warn-only-domination", action="store_true",
+                    help="domination-rate drift warns instead of failing "
+                         "(anomalies always fail)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="distill --campaign into --baseline and exit")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.campaign):
+        print(f"no campaign document at {args.campaign} — run "
+              f"`python -m repro.eval --smoke|--full --out bench_out` first")
+        return 2
+
+    from repro.eval.report import load_campaign
+
+    try:
+        doc = load_campaign(args.campaign)
+    except ValueError as e:
+        print(f"FAIL {e}")
+        return 1
+
+    if args.write_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(distill(doc), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    problems, warnings, report = check(
+        doc, baseline, warn_only_domination=args.warn_only_domination,
+        smoke=args.smoke,
+    )
+    for line in report:
+        print(line)
+    for w in warnings:
+        print(f"  WARN {w}")
+    if problems:
+        for p in problems:
+            print(f"  FAIL {p}")
+        print(f"{len(problems)} problem(s) vs {args.baseline}")
+        return 1
+    print("campaign gate OK: zero anomalies, domination rate holds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -180,6 +180,34 @@ def _solve_simplex(lp) -> tuple[np.ndarray, str]:
     return res.x, res.status
 
 
+def _primal_violation(lp, x: np.ndarray) -> float:
+    """Worst primal-feasibility violation of ``x`` (0.0 == feasible).
+
+    A dense-simplex exit can read "optimal" while the iterate drifted off
+    the polytope (a numerical fight it lost silently rather than loudly) —
+    the golden-eval campaign caught exactly that on a star/returns LP, with
+    a port-serialization row violated by ~0.24 under an objective that
+    looked better than the true optimum.  Two matvecs make "optimal"
+    actually mean feasible."""
+    worst = 0.0
+    if lp.b_ub:
+        A_ub, b_ub = lp.dense_ub()
+        worst = max(worst, float(np.max(A_ub @ x - b_ub)))
+    if lp.b_eq:
+        A_eq, b_eq = lp.dense_eq()
+        worst = max(worst, float(np.max(np.abs(A_eq @ x - b_eq))))
+    worst = max(worst, float(np.max(-x)) if x.size else 0.0)
+    return worst
+
+
+def _feasibility_tol(x: np.ndarray) -> float:
+    """Absolute tolerance scaled by the iterate's magnitude: schedule-LP
+    variables are event times, so honest float noise is ~1e-12 relative to
+    the makespan while a lost pivot shows up orders of magnitude larger."""
+    scale = float(np.max(np.abs(x))) if x.size else 1.0
+    return 1e-7 * max(1.0, scale)
+
+
 def _solve_serial(req: SolveRequest, backend: str) -> SolveReport:
     """The reference solve path (paper §4): build, solve, replay-validate."""
     inst = req.instance
@@ -198,6 +226,14 @@ def _solve_serial(req: SolveRequest, backend: str) -> SolveReport:
             # schedule LPs are never unbounded — a non-optimal exit here is
             # the dense simplex losing a numerical fight; HiGHS is the rescue
             x, status = _solve_scipy(lp)
+        elif status == "optimal" and _primal_violation(lp, x) > _feasibility_tol(x):
+            # ...and so is an "optimal" exit whose iterate left the polytope
+            # (silently lost pivot): the objective reads better than the true
+            # optimum while a constraint row is violated outright
+            if _have_scipy():
+                x, status = _solve_scipy(lp)
+            else:
+                status = "failed"
             backend = "simplex+scipy"
     else:
         raise ValueError(backend)

@@ -18,9 +18,26 @@ Implemented strategies:
                 largest equal-compute-duration chunk whose communications
                 complete before the processors finish the previous chunk
                 (no idle).  May FAIL to cover a load (paper §3.4 case 1) —
-                `MultiInstFailure` reports it.  ``cap`` bounds installments
-                per load; the capped variant dumps the remainder in the last
-                installment (MULTIINST-n of §6).
+                reported as a ``failure == "infeasible"`` result, never an
+                exception.  ``cap`` bounds installments per load; the capped
+                variant dumps the remainder in the last installment
+                (MULTIINST-n of §6).
+
+Failure signalling contract (the campaign classifier depends on it): a
+strategy that cannot produce a schedule returns a :class:`HeuristicResult`
+with ``failed=True`` and a structured ``failure`` kind —
+
+  "infeasible"   the strategy's own construction has no solution on this
+                 instance (paper §3.4 case 1, a per-load LP with an empty
+                 feasible set, installment divergence past the limit);
+  "error"        an unexpected exception inside the construction (a solver
+                 blow-up on pathological numbers) — :func:`run_strategy`
+                 converts it into a result so a campaign sweep can tally it
+                 instead of aborting;
+  "unsupported"  the instance is outside the strategy's model (star
+                 topology / result-return phase — the [18]/[19] strategies
+                 are chain-only); raised as ``ValueError`` by the direct
+                 call, converted by :func:`run_strategy`.
   HEURISTIC_B   reconstruction of [19]'s Heuristic B: like SINGLEINST but the
                 participating set is the best prefix P_1..P_p per load.
 
@@ -55,8 +72,10 @@ __all__ = [
     "single_inst",
     "multi_inst",
     "heuristic_b",
+    "run_strategy",
     "adversary_sweep",
     "ALL_HEURISTICS",
+    "FAILURE_KINDS",
 ]
 
 _TOL = 1e-12
@@ -77,6 +96,10 @@ def _require_chain(inst: Instance, name: str) -> None:
         )
 
 
+# the structured failure kinds a HeuristicResult may carry ("" == success)
+FAILURE_KINDS = ("", "infeasible", "error", "unsupported")
+
+
 @dataclasses.dataclass
 class HeuristicResult:
     name: str
@@ -85,10 +108,29 @@ class HeuristicResult:
     schedule: Schedule | None  # ASAP replay
     failed: bool = False
     reason: str = ""
+    # structured failure kind (see module docstring): "" on success,
+    # "infeasible" when the strategy's construction has no solution,
+    # "error" for an unexpected exception, "unsupported" for instances
+    # outside the strategy's model.  Failed results constructed before this
+    # field existed default to "infeasible" in __post_init__ so old
+    # call sites keep their meaning.
+    failure: str = ""
+
+    def __post_init__(self):
+        if self.failed and not self.failure:
+            self.failure = "infeasible"
+        if self.failure not in FAILURE_KINDS:
+            raise ValueError(f"unknown failure kind {self.failure!r}")
 
     @property
     def makespan(self) -> float:
         return self.schedule.makespan if self.schedule is not None else np.inf
+
+    @property
+    def infeasible(self) -> bool:
+        """True when the strategy itself has no solution on this instance
+        (as opposed to an internal error or an out-of-model instance)."""
+        return self.failure == "infeasible"
 
 
 class _State:
@@ -344,10 +386,28 @@ def _dump_remainder(inst: Instance, n: int, st: "_State", remaining: float) -> n
 
 
 def multi_inst(inst: Instance, cap: int | None = None, max_uncapped: int = 10_000) -> HeuristicResult:
-    """MULTIINST (optionally capped at ``cap`` installments per load)."""
+    """MULTIINST (optionally capped at ``cap`` installments per load).
+
+    Never raises on a well-formed chain instance: a construction that has no
+    solution (paper §3.4 case 1, a chunk LP with an empty feasible set, more
+    than ``max_uncapped`` installments) comes back as a ``failure ==
+    "infeasible"`` result, and an unexpected exception inside the chunk /
+    equal-finish LPs (pathological numerics) as ``failure == "error"`` — so
+    a campaign sweep can classify every instance instead of aborting.
+    """
     _require_chain(inst, "MULTIINST")
-    m = inst.m
     name = f"MULTIINST_{cap}" if cap else "MULTIINST"
+    try:
+        return _multi_inst(inst, name, cap, max_uncapped)
+    except Exception as e:  # construction blow-up -> structured error result
+        return HeuristicResult(
+            name, None, None, None, True,
+            f"construction raised {type(e).__name__}: {e}", failure="error",
+        )
+
+
+def _multi_inst(inst: Instance, name: str, cap: int | None, max_uncapped: int) -> HeuristicResult:
+    m = inst.m
     if m == 1:
         cols = [np.array([1.0]) for _ in range(inst.N)]
         return _finalize(name, inst, [1] * inst.N, cols)
@@ -437,6 +497,25 @@ ALL_HEURISTICS = {
 }
 
 
+def run_strategy(name: str, fn, inst: Instance) -> HeuristicResult:
+    """Run one strategy with the campaign's failure contract: never raises.
+
+    Out-of-model instances (the chain-only guard's ``ValueError``) come back
+    as ``failure == "unsupported"``, any other exception as ``failure ==
+    "error"`` — both as resolved results so sweeps tally them instead of
+    aborting.  Success and structured in-model failures pass through.
+    """
+    try:
+        return fn(inst)
+    except ValueError as e:  # chain-only guard: out of the strategy's model
+        return HeuristicResult(name, None, None, None, True, str(e),
+                               failure="unsupported")
+    except Exception as e:  # unexpected blow-up inside the construction
+        return HeuristicResult(name, None, None, None, True,
+                               f"construction raised {type(e).__name__}: {e}",
+                               failure="error")
+
+
 def adversary_sweep(
     instances: list,
     strategies: dict | None = None,
@@ -460,12 +539,6 @@ def adversary_sweep(
     """
     strategies = dict(ALL_HEURISTICS) if strategies is None else strategies
 
-    def run(name, fn, inst):
-        try:
-            return fn(inst)
-        except ValueError as e:  # chain-only guard: record, don't abort the sweep
-            return HeuristicResult(name, None, None, None, True, str(e))
-
     sess = None
     if simulator == "batched":
         from repro.api import default_session  # deferred: keeps core jax-free
@@ -474,7 +547,7 @@ def adversary_sweep(
 
     out = {}
     for name, fn in strategies.items():
-        results = [run(name, fn, inst) for inst in instances]
+        results = [run_strategy(name, fn, inst) for inst in instances]
         mks = np.full(len(instances), np.inf)
         ok = [i for i, r in enumerate(results) if not r.failed]
         if ok and sess is not None:

@@ -1,0 +1,59 @@
+"""Golden-eval campaigns: sweep instance grids, classify LP vs heuristics.
+
+The paper's central empirical claim — the LP always produces the best
+schedule while the §3 strategies (SIMPLE, SINGLELOAD [18], SINGLEINST /
+MULTIINST [19], HEURISTIC B) can fail outright or land far from optimal —
+lives here as an always-on, machine-checked evaluation:
+
+* :class:`CampaignSpec` (``spec.py``) — a seeded deterministic grid over
+  topology x return_ratio x release x m x n_loads x q x heterogeneity x
+  comm_to_comp; every instance re-derives bit-identically from the seed;
+* :func:`run_campaign` (``runner.py``) — bulk-solves the LP side through
+  one coalescing :class:`repro.api.Session` and runs every strategy
+  through the structured-failure contract;
+* :func:`classify_instance` (``classify.py``) — buckets each case into
+  lp-wins / tie / heuristic-infeasible / lp-fallback / anomaly, with lazy
+  matched-structure verification before anything is called an anomaly;
+* :func:`build_document` (``report.py``) — the schema-versioned
+  ``campaign.json`` + markdown report that CI gates on
+  (``scripts/check_campaign.py``).
+
+Quickstart::
+
+    from repro.eval import smoke_spec, run_campaign, build_document, write_campaign
+    result = run_campaign(smoke_spec(), strict=True)   # raises on any anomaly
+    write_campaign(build_document(result), "bench_out/campaign.json",
+                   "bench_out/campaign.md")
+
+or from the shell: ``python -m repro.eval --smoke --out bench_out``.
+"""
+
+from .classify import CLASSES, Classification, classify_instance
+from .report import (
+    CAMPAIGN_SCHEMA_VERSION,
+    build_document,
+    load_campaign,
+    render_markdown,
+    validate_campaign,
+    write_campaign,
+)
+from .runner import CampaignAnomalyError, CampaignResult, run_campaign
+from .spec import CampaignSpec, full_spec, smoke_spec
+
+__all__ = [
+    "CLASSES",
+    "CAMPAIGN_SCHEMA_VERSION",
+    "CampaignSpec",
+    "CampaignResult",
+    "CampaignAnomalyError",
+    "Classification",
+    "classify_instance",
+    "run_campaign",
+    "build_document",
+    "render_markdown",
+    "write_campaign",
+    "load_campaign",
+    "validate_campaign",
+    "smoke_spec",
+    "full_spec",
+]

@@ -1,0 +1,61 @@
+"""CLI for running evaluation campaigns.
+
+Examples::
+
+    python -m repro.eval --smoke --out bench_out            # CI tier
+    python -m repro.eval --full --out bench_out --strict    # sweep of record
+    python -m repro.eval --smoke --backend auto             # no JAX compiles
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .report import build_document, write_campaign
+from .runner import CampaignAnomalyError, run_campaign
+from .spec import full_spec, smoke_spec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.eval",
+        description="Run an LP-vs-heuristics evaluation campaign.",
+    )
+    tier = p.add_mutually_exclusive_group(required=True)
+    tier.add_argument("--smoke", action="store_true",
+                      help="the ~256-instance CI tier")
+    tier.add_argument("--full", action="store_true",
+                      help="the >=1000-instance sweep of record")
+    p.add_argument("--out", default="bench_out",
+                   help="output directory for campaign.json / campaign.md")
+    p.add_argument("--backend", default=None,
+                   help="LP-side backend override (default: spec preset)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit non-zero on any anomaly (after writing the report)")
+    args = p.parse_args(argv)
+
+    spec = smoke_spec() if args.smoke else full_spec()
+    if args.backend:
+        import dataclasses
+        spec = dataclasses.replace(spec, backend=args.backend)
+
+    result = run_campaign(spec, progress=lambda m: print(m, flush=True))
+    doc = build_document(result)
+    json_path = os.path.join(args.out, "campaign.json")
+    md_path = os.path.join(args.out, "campaign.md")
+    write_campaign(doc, json_path, md_path)
+    print(f"wrote {json_path} and {md_path}")
+
+    if args.strict:
+        try:
+            result.require_clean()
+        except CampaignAnomalyError as e:
+            print(f"CAMPAIGN FAILED:\n{e}", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

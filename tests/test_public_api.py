@@ -1,17 +1,19 @@
 """Public-API snapshot: the front-door surface changes deliberately or not
 at all.
 
-``tests/public_api_manifest.json`` is the checked-in contract: the
-``repro.api`` export list and the parameter names of every front-door
-method and compatibility shim.  A PR that reshapes the surface must edit
-the manifest in the same diff — review sees the API change explicitly
-instead of discovering it downstream.
+``tests/public_api_manifest.json`` is the checked-in contract: the export
+list of every snapshotted front-door package (``repro.api``, ``repro.eval``,
+and any future ``*.__all__`` key added to the manifest) and the parameter
+names of every front-door method and compatibility shim.  A PR that
+reshapes the surface must edit the manifest in the same diff — review sees
+the API change explicitly instead of discovering it downstream.
 
 Regenerate after a *deliberate* change with::
 
     PYTHONPATH=src python tests/test_public_api.py --regen
 """
 
+import importlib
 import inspect
 import json
 import pathlib
@@ -24,8 +26,6 @@ def _resolve(dotted: str):
     parts = dotted.split(".")
     for k in range(len(parts), 0, -1):
         try:
-            import importlib
-
             mod = importlib.import_module(".".join(parts[:k]))
         except ImportError:
             continue
@@ -37,24 +37,29 @@ def _resolve(dotted: str):
 
 
 def _current_manifest() -> dict:
-    import repro.api as api
-
     saved = json.loads(_MANIFEST.read_text())
-    return {
-        "repro.api.__all__": sorted(api.__all__),
-        "signatures": {
-            name: [p for p in inspect.signature(_resolve(name)).parameters]
-            for name in saved["signatures"]
-        },
+    current = {
+        key: sorted(importlib.import_module(key[: -len(".__all__")]).__all__)
+        for key in saved
+        if key.endswith(".__all__")
     }
+    current["signatures"] = {
+        name: [p for p in inspect.signature(_resolve(name)).parameters]
+        for name in saved["signatures"]
+    }
+    return current
 
 
 def test_api_exports_match_manifest():
     saved = json.loads(_MANIFEST.read_text())
-    assert _current_manifest()["repro.api.__all__"] == saved["repro.api.__all__"], (
-        "repro.api.__all__ changed — if deliberate, regenerate "
-        "tests/public_api_manifest.json (see module docstring)"
-    )
+    current = _current_manifest()
+    for key in saved:
+        if not key.endswith(".__all__"):
+            continue
+        assert current[key] == saved[key], (
+            f"{key} changed — if deliberate, regenerate "
+            "tests/public_api_manifest.json (see module docstring)"
+        )
 
 
 def test_shim_signatures_match_manifest():

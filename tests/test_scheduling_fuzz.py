@@ -275,3 +275,61 @@ def test_status4_routes_to_serial_identically(monkeypatch, topology):
     assert rb.backend not in ("batched", "pallas")
     np.testing.assert_array_equal(rp.schedule.gamma, rb.schedule.gamma)
     assert rp.makespan == rb.makespan
+
+
+# ------------------------------------------------- campaign classifier arm
+
+
+def _classifier_never_anomalous(shape_idx, topology, with_returns,
+                                with_release, with_latency, seed):
+    """The campaign classifier must agree with this suite by construction:
+    on any random Chain/Star instance the LP is <= every feasible heuristic
+    (at the heuristic's own installment structure) within 1e-9 — i.e. the
+    verdict is never ``anomaly``.  Serial backends keep this compile-free."""
+    from repro.api import Policy, Session
+    from repro.core.heuristics import ALL_HEURISTICS, run_strategy
+    from repro.eval import CLASSES, classify_instance
+
+    m, n_loads, q = SHAPES[shape_idx % len(SHAPES)]
+    rng = np.random.default_rng(seed)
+    inst = random_platform_instance(
+        rng, m, n_loads, q, with_latency, with_release, with_tau=False,
+        topology=topology, with_returns=with_returns)
+    sess = Session(policy=Policy(backend="simplex"))
+    art = sess.solve(inst)
+    runs = [run_strategy(n, f, inst) for n, f in ALL_HEURISTICS.items()]
+    c = classify_instance(inst, art, runs, rtol=RTOL,
+                          matched_solve=sess.solve)
+    assert c.label in CLASSES
+    assert c.label != "anomaly", (
+        f"classifier anomaly on a random instance: {c.anomaly}")
+    # and the LP bound holds pointwise against every feasible heuristic
+    for name, entry in c.strategies.items():
+        if entry["failure"] == "" and entry["makespan"] is not None:
+            assert c.effective_lp <= entry["makespan"] * (1 + 1e-7) + 1e-9, (
+                f"{name} beat the LP: {entry['makespan']} < {c.effective_lp}")
+
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("k", range(0, len(SHAPES), 2))
+def test_campaign_classifier_seeded_sweep(k, topology):
+    _classifier_never_anomalous(k, topology, with_returns=bool(k % 2 == 0),
+                                with_release=bool(k % 3 == 1),
+                                with_latency=bool(k % 2), seed=4000 + k)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        shape_idx=st.integers(0, len(SHAPES) - 1),
+        topology=st.sampled_from(TOPOLOGIES),
+        with_returns=st.booleans(),
+        with_release=st.booleans(),
+        with_latency=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_campaign_classifier_hypothesis(shape_idx, topology, with_returns,
+                                            with_release, with_latency, seed):
+        _classifier_never_anomalous(shape_idx, topology, with_returns,
+                                    with_release, with_latency, seed)
