@@ -1,0 +1,176 @@
+"""Replan latency: warm-started re-solves vs cold solves on single-event
+perturbations (the PR-9 online-replanning claim).
+
+Two rungs:
+
+  * **simplex layer** — one packed bucket of star-with-returns instances is
+    solved cold, the constraint rows are perturbed by a mild speed drift
+    (the ``SpeedObserved`` regime: coefficients move, the row pattern does
+    not), and the perturbed batch is re-solved twice: cold (full two-phase)
+    and warm (``warm_basis=`` the previous exit basis, basis-seeded entry,
+    zero phase-1 pivots on accepted lanes).  The acceptance bar is warm
+    >= 3x cold at full scale.  Objectives are asserted equal (rtol 1e-9)
+    every rep — a fast wrong answer is not a speedup.
+  * **event stream** — end-to-end ``EventStreamReplanner.apply`` latency for
+    a run of distinct ``SpeedObserved`` events, warm vs ``warm=False``,
+    through separate sessions (every apply a cache miss in both).  Recorded
+    informationally: session dispatch + artifact assembly amortize the
+    solver win, so the end-to-end ratio is the honest serving number while
+    the simplex rung isolates the mechanism.
+
+CSV: bench_out/replan.csv.  The >=3x bar is a full-scale claim only; smoke
+runs record the ratios informationally (same convention as bench_hotpath).
+"""
+
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from .common import banner, write_csv
+
+B_FULL = 256  # bucket width at full scale (one compiled shape)
+B_QUICK = 32
+N_EVENTS_FULL = 24  # end-to-end SpeedObserved run length
+N_EVENTS_QUICK = 6
+
+
+def _population(rng, n: int) -> list:
+    """Same-shape star instances with returns -> exactly one packed bucket
+    (the shape proven in tests/test_scheduling_fuzz.py's warm-start arm)."""
+    from repro.core.instance import random_instance
+
+    return [
+        random_instance(rng, m=4, n_loads=2, q=2, topology="star",
+                        return_ratio=0.25)
+        for _ in range(n)
+    ]
+
+
+def _bench_simplex(rng, n: int) -> dict:
+    from repro.engine.arena import pack_instances
+    from repro.engine.batched_lp import build_lp_bucket
+    from repro.engine.batched_simplex import solve_simplex_batched
+
+    insts = _population(rng, n)
+    (bucket,) = pack_instances(insts)
+    lp = build_lp_bucket(bucket)
+    c = np.tile(lp.c, (bucket.B, 1))
+
+    base = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    assert (base.status == 0).all(), "cold baseline failed to solve"
+    # a single-event perturbation: the speed drift moves coefficients but
+    # keeps the row pattern, so the exit basis remains a valid seed
+    A_ub2 = lp.A_ub * (1 + 1e-3)
+
+    # warm-up: compile both perturbed paths before timing
+    cold0 = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq)
+    warm0 = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq,
+                                  warm_basis=base.basis)
+    accepted = int(warm0.warm_started.sum())
+    assert accepted > 0, "no lane accepted the carried basis"
+    np.testing.assert_allclose(warm0.objective, cold0.objective,
+                               rtol=1e-9, atol=1e-12)
+
+    cold_t, warm_t = [], []
+    for _ in range(3):
+        gc.collect()
+        t0 = time.perf_counter()
+        cold = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq)
+        cold_t.append(time.perf_counter() - t0)
+        gc.collect()
+        t0 = time.perf_counter()
+        warm = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq,
+                                     warm_basis=base.basis)
+        warm_t.append(time.perf_counter() - t0)
+        np.testing.assert_allclose(warm.objective, cold.objective,
+                                   rtol=1e-9, atol=1e-12)
+    return {
+        "cold": n / sorted(cold_t)[1],
+        "warm": n / sorted(warm_t)[1],
+        "accepted": accepted,
+        "n": n,
+    }
+
+
+def _bench_event_stream(n_events: int) -> dict:
+    from repro.api import Policy, Problem, Session
+    from repro.runtime.replan import EventStreamReplanner, SpeedObserved
+
+    problem = Problem(
+        w=[1.0, 2.0, 1.5, 1.2],
+        z=[0.3, 0.2, 0.25],
+        v_comm=[1.0, 2.0],
+        v_comp=[1.0, 1.5],
+        latency=[1e-3, 2e-3, 1.5e-3],
+        topology="star",
+        return_ratio=0.25,
+    )
+    policy = Policy(installments=2, backend="batched")
+    # distinct w values: every apply is a fresh problem (cache miss) in both
+    # runs, so the ratio compares solver work, not cache behaviour
+    events = [SpeedObserved(index=1 + (k % 3), w=1.3 + 0.01 * k)
+              for k in range(n_events)]
+
+    out = {}
+    for label, warm in (("cold", False), ("warm", True)):
+        rp = EventStreamReplanner(Session(policy=policy), problem, policy,
+                                  warm=warm)
+        rp.apply(SpeedObserved(index=1, w=1.29))  # compile the apply path
+        gc.collect()
+        t0 = time.perf_counter()
+        arts = rp.replay(events)
+        out[label] = n_events / (time.perf_counter() - t0)
+        assert all(a.ok for a in arts)
+        rp.close()
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    banner("bench_replan (warm-start simplex vs cold / event-stream apply)")
+    claims: dict = {}
+
+    n = B_QUICK if quick else B_FULL
+    sx = _bench_simplex(np.random.default_rng(17), n)
+    speedup = sx["warm"] / sx["cold"]
+    print(f"  simplex re-solve ({sx['n']} lanes, {sx['accepted']} warm-accepted): "
+          f"cold {sx['cold']:9.0f} inst/s   warm {sx['warm']:9.0f} inst/s "
+          f"({speedup:.1f}x)")
+
+    n_ev = N_EVENTS_QUICK if quick else N_EVENTS_FULL
+    ev = _bench_event_stream(n_ev)
+    ev_ratio = ev["warm"] / ev["cold"]
+    print(f"  event-stream apply ({n_ev} SpeedObserved): "
+          f"cold {ev['cold']:7.1f} ev/s   warm {ev['warm']:7.1f} ev/s "
+          f"({ev_ratio:.2f}x, informational)")
+
+    write_csv(
+        "replan.csv",
+        [
+            ["replan_solve_per_sec", "cold", sx["cold"]],
+            ["replan_solve_per_sec", "warm", sx["warm"]],
+            ["replan_warm_speedup", "simplex", speedup],
+            ["replan_event_per_sec", "cold", ev["cold"]],
+            ["replan_event_per_sec", "warm", ev["warm"]],
+        ],
+        ["metric", "label", "value"],
+    )
+
+    claims["warm_accepted_lanes"] = sx["accepted"] > 0
+    if quick:
+        claims["warm_speedup"] = round(speedup, 1)
+        claims["event_stream_ratio"] = round(ev_ratio, 2)
+    else:
+        claims["warm_3x_cold"] = speedup >= 3.0
+    for k, v in claims.items():
+        if isinstance(v, bool):
+            print(f"  CLAIM {k}: {'OK' if v else 'VIOLATED'}")
+        else:
+            print(f"  CLAIM {k} = {v} (informational at smoke scale)")
+    return claims
+
+
+if __name__ == "__main__":
+    main()

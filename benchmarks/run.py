@@ -109,6 +109,19 @@ def bench_metrics(benches: dict) -> dict:
             elif rec["metric"] == "session_to_direct_ratio":
                 reg.set_gauge("repro_bench_session_to_direct_ratio",
                               float(rec["value"]), mix=f"hotpath_{rec['label']}")
+    b = benches.get("replan")
+    if b:
+        for row in b["rows"]:
+            rec = dict(zip(b["header"], row))
+            if rec["metric"] == "replan_solve_per_sec":
+                reg.set_gauge("repro_bench_replan_solves_per_sec",
+                              float(rec["value"]), path=rec["label"])
+            elif rec["metric"] == "replan_warm_speedup":
+                reg.set_gauge("repro_bench_replan_warm_speedup",
+                              float(rec["value"]), layer=rec["label"])
+            elif rec["metric"] == "replan_event_per_sec":
+                reg.set_gauge("repro_bench_replan_events_per_sec",
+                              float(rec["value"]), path=rec["label"])
     return reg.snapshot()
 
 
@@ -194,12 +207,12 @@ def main(argv=None) -> int:
         return 0
     quick = not args.full
     if args.smoke and not args.only:
-        args.only = "engine_throughput,star,kernels,session,hotpath"
+        args.only = "engine_throughput,star,kernels,session,hotpath,replan"
 
     from . import (bench_campaign, bench_engine_throughput, bench_hotpath,
                    bench_kernels, bench_latency_qstar, bench_lp_scaling,
-                   bench_motivating_example, bench_session, bench_star,
-                   bench_table2, bench_theorem1, roofline)
+                   bench_motivating_example, bench_replan, bench_session,
+                   bench_star, bench_table2, bench_theorem1, roofline)
 
     benches = {
         "motivating_example": bench_motivating_example.main,
@@ -212,6 +225,7 @@ def main(argv=None) -> int:
         "star": bench_star.main,
         "session": bench_session.main,
         "hotpath": bench_hotpath.main,
+        "replan": bench_replan.main,
         # not in the --smoke only-list: CI gives the campaign its own
         # dedicated step (python -m repro.eval --smoke + check_campaign.py)
         "campaign": bench_campaign.main,

@@ -153,6 +153,30 @@ if tel and "lp" in tel:
           f"pivots={tel['lp']['pivots_phase1']}+{tel['lp']['pivots_phase2']}, "
           f"simplex {tel['stages']['simplex_s']*1e3:.1f}ms")
 
+# ---------------------------------------------------------------- 3ter
+print("\n=== live replanning: platform events -> warm-started re-solves ===")
+from repro.runtime.replan import EventStreamReplanner, SpeedObserved
+
+# one replanner tracks one evolving problem (the star-with-returns instance
+# from section 2) through its own session; each apply() folds the event,
+# re-solves, and publishes to the attached subscription (DESIGN.md §11)
+live = Session(policy=Policy(backend="batched"))
+replanner = EventStreamReplanner(live, ret, Policy(backend="batched"))
+sub = replanner.subscription  # or: live.subscribe(problem, policy)
+snap = sub.next(timeout=5.0)  # first update: the initial plan snapshot
+print(f"  initial plan: makespan = {snap.makespan:.6f}")
+for k in range(3):
+    # a worker drifts slower: coefficient-only, so the previous exit basis
+    # seeds a verify-first warm entry (zero pivots when it certifies)
+    replanner.apply(SpeedObserved(index=2, w=0.6 * (1.0 + 0.05 * (k + 1))))
+    update = sub.next(timeout=5.0)  # long-poll the plan feed
+    prov = update.events[-1]  # {"kind": "replan", ...} provenance event
+    print(f"  {prov['trigger']}(w={replanner.problem.w[2]:.3f}): "
+          f"makespan = {update.makespan:.6f}, warm={prov['warm']}, "
+          f"pivots={prov['pivots_phase1']}+{prov['pivots_phase2']}")
+replanner.close()
+assert sub.next(timeout=0.1) is None, "closed feed must drain to None"
+
 # ------------------------------------------------------------------- 4
 print("\n=== the same LP scheduling real training batches on a chain ===")
 cfg = smoke_variant(get_arch("llama3.2-3b"))

@@ -20,7 +20,7 @@ see DESIGN.md §7 and examples/quickstart.py for the migration table.
 """
 
 from .artifact import ARTIFACT_VERSION, PlanArtifact
-from .session import PlanTicket, Session
+from .session import PlanSubscription, PlanTicket, Session
 from .spec import Policy, Problem
 
 __all__ = [
@@ -28,6 +28,7 @@ __all__ = [
     "Policy",
     "Session",
     "PlanTicket",
+    "PlanSubscription",
     "PlanArtifact",
     "ARTIFACT_VERSION",
     "default_session",

@@ -110,11 +110,21 @@ class PlanArtifact:
 
     # ---------------- diffing ----------------
 
-    def diff(self, other: "PlanArtifact", tol: float = 0.0) -> dict:
+    def diff(self, other: "PlanArtifact", tol: float = 0.0,
+             include_provenance: bool = False) -> dict:
         """Field-level differences between two artifacts (empty == same plan).
 
         Compares the decision and outcome fields; ``tol`` is an absolute
         tolerance on the float fields and on the gamma entries (0 = exact).
+        NaN gamma cells (failed solves) only match NaN cells — a failed
+        plan never diffs clean against a solved one.
+
+        ``include_provenance=True`` additionally compares the serving
+        provenance (``backend``, ``cache_hit``, and — only when *both*
+        artifacts are v2 documents — the structured ``events``).  The v2
+        fields are version-gated so diffing a v1 document against a v2 one
+        reports the version seam itself (``{"version": (1, 2)}``) instead of
+        mis-reporting v1's absent events as "no events happened".
         """
         out: dict = {}
         if self.problem != other.problem:
@@ -126,10 +136,15 @@ class PlanArtifact:
         if self.gamma.shape != other.gamma.shape:
             out["gamma"] = (self.gamma.shape, other.gamma.shape)
         else:
-            with np.errstate(invalid="ignore"):
-                d = np.abs(self.gamma - other.gamma)
-            if not (np.nan_to_num(d) <= tol).all():
-                out["gamma"] = float(np.nanmax(d))
+            a, b = np.asarray(self.gamma), np.asarray(other.gamma)
+            nan_a, nan_b = np.isnan(a), np.isnan(b)
+            if (nan_a != nan_b).any():
+                out["gamma"] = "nan-pattern"
+            else:
+                with np.errstate(invalid="ignore"):
+                    d = np.abs(a - b)
+                if not (np.nan_to_num(d) <= tol).all():
+                    out["gamma"] = float(np.nanmax(d))
         for f in ("makespan", "lp_makespan", "objective_value"):
             a, b = getattr(self, f), getattr(other, f)
             same = (a == b) or (np.isnan(a) and np.isnan(b)) or (
@@ -137,6 +152,16 @@ class PlanArtifact:
             )
             if not same:
                 out[f] = (a, b)
+        if include_provenance:
+            if self.backend != other.backend:
+                out["backend"] = (self.backend, other.backend)
+            if self.cache_hit != other.cache_hit:
+                out["cache_hit"] = (self.cache_hit, other.cache_hit)
+            if self.version >= 2 and other.version >= 2:
+                if self.events != other.events:
+                    out["events"] = (self.events, other.events)
+            elif self.version != other.version:
+                out["version"] = (self.version, other.version)
         return out
 
     # ---------------- serialization ----------------

@@ -41,9 +41,11 @@ API call after it expires (and ``result()`` always resolves immediately).
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import copy
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -56,7 +58,7 @@ from repro.obs import trace as obs_trace
 from .artifact import PlanArtifact
 from .spec import Policy, Problem
 
-__all__ = ["Session", "PlanTicket"]
+__all__ = ["Session", "PlanTicket", "PlanSubscription"]
 
 # backends that consult the session's solution cache; resolved lazily so the
 # cache (and with it the engine) is only constructed when actually needed
@@ -152,6 +154,81 @@ class PlanTicket:
         )
 
 
+class PlanSubscription:
+    """A live feed of plan updates for one evolving problem.
+
+    Returned by :meth:`Session.subscribe`; the event-stream replanner
+    (:mod:`repro.runtime.replan`) — or any caller holding the handle —
+    pushes re-solved artifacts with :meth:`publish` and consumers long-poll
+    :meth:`next`.  Updates queue in publish order (bounded; oldest dropped),
+    so a slow consumer never blocks a replan and never sees updates out of
+    order.  Thread-safe: publish and next may race freely.
+    """
+
+    def __init__(self, session: "Session", problem, policy,
+                 max_queue: int = 256):
+        self.session = session
+        self.problem = problem  # current problem state (replans update this)
+        self.policy = policy
+        self._cond = threading.Condition()
+        self._queue: collections.deque = collections.deque(maxlen=max_queue)
+        self._latest: PlanArtifact | None = None
+        self._closed = False
+
+    def publish(self, artifact: PlanArtifact, problem=None) -> None:
+        """Push one plan update (and optionally the evolved problem state)."""
+        with self._cond:
+            if self._closed:
+                return
+            if problem is not None:
+                self.problem = problem
+            self._latest = artifact
+            self._queue.append(artifact)
+            self._cond.notify_all()
+
+    def next(self, timeout: float | None = None) -> PlanArtifact | None:
+        """Long-poll the next plan update (FIFO).
+
+        Blocks until an update is queued, the subscription closes, or
+        ``timeout`` (seconds) elapses; returns ``None`` on timeout or
+        close-with-empty-queue.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while not self._queue:
+                if self._closed:
+                    return None
+                wait = None if deadline is None else deadline - time.monotonic()
+                if wait is not None and wait <= 0:
+                    return None
+                self._cond.wait(wait)
+            return self._queue.popleft()
+
+    def latest(self) -> PlanArtifact | None:
+        """The most recently published artifact (does not consume the queue)."""
+        with self._cond:
+            return self._latest
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """End the feed: queued updates stay readable, blocked ``next`` calls
+        wake and drain them, then return ``None``."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def __iter__(self):
+        while True:
+            art = self.next()
+            if art is None and self._closed and not self._queue:
+                return
+            if art is not None:
+                yield art
+
+
 @dataclasses.dataclass
 class _Pending:
     seq: int
@@ -162,6 +239,7 @@ class _Pending:
     priority: int
     deadline: float | None  # absolute time.monotonic() deadline
     ticket: PlanTicket
+    warm_basis: object = None  # per-problem engine warm-start seed
 
 
 class Session:
@@ -195,6 +273,14 @@ class Session:
         self._unreported_submits = 0  # counted locally, flushed to metrics in batch
         self.flush_count = 0  # completed (non-empty) flushes, for coalescing tests
         self._metrics = metrics  # None -> follow the process registry
+        # one coarse reentrant lock over the submit/flush/solve bookkeeping:
+        # the queue append + seq bump + deadline arm in submit, and the
+        # queue swap + per-ticket resolution in flush, are multi-step
+        # critical sections — two threads interleaving them lose tickets or
+        # resolve one twice.  Reentrant because submit can trigger flush
+        # (max_batch/deadline) and result() auto-flushes while a flush may
+        # already hold the lock on this thread.
+        self._lock = threading.RLock()
 
     @property
     def metrics(self):
@@ -319,26 +405,45 @@ class Session:
 
     # ---------------- synchronous front door ----------------
 
-    def solve(self, problem, policy: Policy | None = None, *, backend=None) -> PlanArtifact:
-        """Solve one problem (auto-T sweeps included) into a PlanArtifact."""
-        return self.solve_bulk([problem], policy, backend=backend)[0]
+    def solve(self, problem, policy: Policy | None = None, *, backend=None,
+              warm_basis=None) -> PlanArtifact:
+        """Solve one problem (auto-T sweeps included) into a PlanArtifact.
 
-    def solve_bulk(self, problems, policy: Policy | None = None, *, backend=None) -> list:
+        ``warm_basis`` seeds the engine's basis-seeded simplex entry (the
+        replan hot path) — pass ``telemetry["lp"]["final_basis"]`` of a
+        previous solve of a perturbed sibling; unusable seeds fall back to a
+        cold solve transparently (serial backends ignore it entirely).
+        """
+        return self.solve_bulk([problem], policy, backend=backend,
+                               warm_starts=None if warm_basis is None else [warm_basis])[0]
+
+    def solve_bulk(self, problems, policy: Policy | None = None, *, backend=None,
+                   warm_starts=None) -> list:
         """Solve a population in one bulk call; artifacts in caller order.
 
         ``problems`` may be :class:`Problem` specs or legacy
         :class:`Instance` objects (whose ``q`` becomes the fixed
-        installment plan for that element).
+        installment plan for that element).  ``warm_starts`` (optional,
+        parallel to ``problems``) carries per-problem engine warm-start
+        bases — see :meth:`solve`.
         """
-        self._flush_expired()  # synchronous traffic still honors queued deadlines
-        policy = policy if policy is not None else self.policy
-        with obs_trace.span("session.solve_bulk", n=len(problems)):
-            work = [
-                self._make_pending(p, policy, backend, seq=-1, priority=0, deadline=None)
-                for p in problems
-            ]
-            self._solve_pending(work)
-            return [w.ticket._materialize() for w in work]
+        if warm_starts is not None and len(warm_starts) != len(problems):
+            raise ValueError(
+                f"warm_starts must parallel problems "
+                f"({len(warm_starts)} != {len(problems)})")
+        with self._lock:
+            self._flush_expired()  # synchronous traffic still honors queued deadlines
+            policy = policy if policy is not None else self.policy
+            with obs_trace.span("session.solve_bulk", n=len(problems)):
+                work = [
+                    self._make_pending(
+                        p, policy, backend, seq=-1, priority=0, deadline=None,
+                        warm_basis=None if warm_starts is None else warm_starts[i],
+                    )
+                    for i, p in enumerate(problems)
+                ]
+                self._solve_pending(work)
+                return [w.ticket._materialize() for w in work]
 
     def evaluate_gammas(self, instances, gammas, use_batched: bool = True) -> np.ndarray:
         """Achieved makespans of explicit fraction assignments (bulk replay).
@@ -387,28 +492,30 @@ class Session:
         poisoned by someone else's bad submit.
         """
         abs_deadline = None if deadline is None else time.monotonic() + float(deadline)
-        with obs_trace.span("session.submit", priority=int(priority)):
-            p = self._make_pending(
-                problem, policy if policy is not None else self.policy, backend,
-                seq=self._seq, priority=int(priority), deadline=abs_deadline,
-            )
-        # submit-queue bookkeeping is batched: the submit counter is kept
-        # locally and pushed to the registry once per flush (one labelled-key
-        # format + lock per batch instead of per submit on the serving path)
-        self._unreported_submits += 1
-        self._pending.append(p)
-        self._seq += 1
-        if abs_deadline is not None and (
-            self._next_deadline is None or abs_deadline < self._next_deadline
-        ):
-            self._next_deadline = abs_deadline
-        if self.max_batch is not None and len(self._pending) >= self.max_batch:
-            self.flush()
-        else:
-            self._flush_expired()
-        return p.ticket
+        with self._lock:
+            with obs_trace.span("session.submit", priority=int(priority)):
+                p = self._make_pending(
+                    problem, policy if policy is not None else self.policy, backend,
+                    seq=self._seq, priority=int(priority), deadline=abs_deadline,
+                )
+            # submit-queue bookkeeping is batched: the submit counter is kept
+            # locally and pushed to the registry once per flush (one labelled-key
+            # format + lock per batch instead of per submit on the serving path)
+            self._unreported_submits += 1
+            self._pending.append(p)
+            self._seq += 1
+            if abs_deadline is not None and (
+                self._next_deadline is None or abs_deadline < self._next_deadline
+            ):
+                self._next_deadline = abs_deadline
+            if self.max_batch is not None and len(self._pending) >= self.max_batch:
+                self.flush()
+            else:
+                self._flush_expired()
+            return p.ticket
 
-    def _make_pending(self, problem, policy, backend, *, seq, priority, deadline) -> _Pending:
+    def _make_pending(self, problem, policy, backend, *, seq, priority, deadline,
+                      warm_basis=None) -> _Pending:
         """Coerce + validate one submission (backend resolution and the
         policy/problem installment match happen now, not at flush)."""
         prob, pol = self._coerce(problem, policy)
@@ -420,7 +527,7 @@ class Session:
         return _Pending(
             seq=seq, problem=prob, policy=pol, backend_override=backend,
             handle=handle, priority=priority, deadline=deadline,
-            ticket=PlanTicket(self, seq),
+            ticket=PlanTicket(self, seq), warm_basis=warm_basis,
         )
 
     def flush(self) -> list:
@@ -433,39 +540,69 @@ class Session:
         and the first error re-raises after the batch is resolved —
         nothing is ever left wedged in the queue.
         """
-        if not self._pending:
-            return []
-        batch, self._pending = self._pending, []
-        self._next_deadline = None
-        if self._unreported_submits:
-            self.metrics.inc("repro_session_submits_total", self._unreported_submits)
-            self._unreported_submits = 0
-        try:
-            with obs_trace.span("session.flush", n=len(batch)):
-                # the queue is already in seq order; only sort when some
-                # ticket actually asked for non-default priority
-                if any(p.priority for p in batch):
-                    work = sorted(batch, key=lambda p: (-p.priority, p.seq))
-                else:
-                    work = batch
-                self._solve_pending(work)
-        except BaseException:
-            # backstop (solver errors are handled per group): re-queue
-            # whatever was left unresolved so no ticket is ever lost
-            self._pending = [
-                p for p in batch
-                if p.ticket._artifact is None and p.ticket._payload is None
-            ] + self._pending
-            self._recompute_deadline()
-            raise
-        self.flush_count += 1
-        self.metrics.inc("repro_session_flushes_total")
-        return [p.ticket._materialize() for p in batch]
+        with self._lock:
+            if not self._pending:
+                return []
+            batch, self._pending = self._pending, []
+            self._next_deadline = None
+            if self._unreported_submits:
+                self.metrics.inc("repro_session_submits_total", self._unreported_submits)
+                self._unreported_submits = 0
+            try:
+                with obs_trace.span("session.flush", n=len(batch)):
+                    # the queue is already in seq order; only sort when some
+                    # ticket actually asked for non-default priority
+                    if any(p.priority for p in batch):
+                        work = sorted(batch, key=lambda p: (-p.priority, p.seq))
+                    else:
+                        work = batch
+                    self._solve_pending(work)
+            except BaseException:
+                # backstop (solver errors are handled per group): re-queue
+                # whatever was left unresolved so no ticket is ever lost
+                self._pending = [
+                    p for p in batch
+                    if p.ticket._artifact is None and p.ticket._payload is None
+                ] + self._pending
+                self._recompute_deadline()
+                raise
+            self.flush_count += 1
+            self.metrics.inc("repro_session_flushes_total")
+            return [p.ticket._materialize() for p in batch]
 
     def _flush_expired(self) -> None:
         # O(1) on the hot path: only scan when an armed deadline expired
-        if self._next_deadline is not None and time.monotonic() >= self._next_deadline:
-            self.flush()
+        with self._lock:
+            if self._next_deadline is not None and time.monotonic() >= self._next_deadline:
+                self.flush()
+
+    # ---------------- subscriptions (online replanning) ----------------
+
+    def subscribe(
+        self,
+        problem,
+        policy: Policy | None = None,
+        *,
+        backend=None,
+        artifact: PlanArtifact | None = None,
+    ) -> PlanSubscription:
+        """Open a live plan feed for ``problem``.
+
+        Solves the problem once (unless an already-solved ``artifact`` is
+        handed in to adopt) and returns a :class:`PlanSubscription` seeded
+        with that plan; replanners push updates into the handle with
+        ``publish`` and consumers long-poll ``handle.next()``.  The session
+        itself stays passive — there is no background thread; what *drives*
+        updates is whoever consumes the event stream (see
+        :class:`repro.runtime.replan.EventStreamReplanner`).
+        """
+        pol = policy if policy is not None else self.policy
+        sub = PlanSubscription(self, problem, pol)
+        if artifact is None:
+            artifact = self.solve(problem, pol, backend=backend)
+        sub.publish(artifact)
+        self.metrics.inc("repro_session_subscriptions_total")
+        return sub
 
     def _recompute_deadline(self) -> None:
         armed = [p.deadline for p in self._pending if p.deadline is not None]
@@ -544,6 +681,7 @@ class Session:
                         beta=p.policy.beta,
                         cross_check=p.policy.cross_check,
                         validate=p.policy.validate,
+                        warm_basis=p.warm_basis,
                     )
                     for q in p.policy.q_candidates(p.problem)
                 ]

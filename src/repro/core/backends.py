@@ -108,6 +108,11 @@ class SolveRequest:
     beta: float = 0.0
     cross_check: bool = False
     validate: bool = True
+    # warm-start seed for the engine backends: the exit basis of a previous
+    # solve of a perturbed sibling (sequence of LP-row column ids, as found
+    # in telemetry["lp"]["final_basis"]).  None = cold.  Serial backends
+    # ignore it — it is a speed hint, never a correctness input.
+    warm_basis: object = None
 
 
 @dataclasses.dataclass

@@ -98,6 +98,32 @@ class PackedBucket:
             out[b, : self.m_real, : self.T_real] = g
         return out
 
+    def basis_padded(self, bases: list, n_rows: int) -> np.ndarray | None:
+        """Stack per-instance warm-start bases into the [B, n_rows] int64
+        array :func:`solve_simplex_batched` expects.
+
+        ``bases`` holds one entry per batch row: a length-``n_rows`` int
+        sequence (a carried exit basis) or ``None`` for a cold start.  Rows
+        whose entry is missing — or whose length disagrees with this
+        bucket's LP row count (a replan that changed ``q``/topology moved
+        the instance to a different bucket shape) — are filled with ``-1``,
+        which the solver treats as "no seed".  Returns ``None`` when no row
+        carries a usable seed, so cold bulk solves pay nothing.
+        """
+        if n_rows <= 0:
+            return None
+        out = np.full((self.B, n_rows), -1, dtype=np.int64)
+        any_seed = False
+        for b, basis in enumerate(bases):
+            if basis is None:
+                continue
+            arr = np.asarray(basis, dtype=np.int64).reshape(-1)
+            if arr.shape[0] != n_rows:
+                continue
+            out[b] = arr
+            any_seed = True
+        return out if any_seed else None
+
     def unpad(self, arr: np.ndarray) -> np.ndarray:
         """Strip processor/cell padding from a [B, m(,−1), T]-shaped result."""
         if arr.ndim == 3 and arr.shape[1] == self.m:

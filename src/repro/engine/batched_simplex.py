@@ -56,6 +56,12 @@ STATUS = {
     # full-tableau passes for a case that essentially never occurs on
     # schedule LPs), so such elements are flagged for the serial fallback
     # instead of being silently mis-solved
+    5: "false_optimal",  # an "optimal" exit whose iterate violates a primal
+    # constraint beyond the feasibility tolerance — the same silently-lost-
+    # pivot escape core.backends._primal_violation guards on the serial
+    # path.  Demoted here so the service's certification routes the element
+    # to the serial rescue instead of shipping an infeasible plan whose
+    # objective reads better than the true optimum.
 }
 
 _RUNNING, _OPTIMAL, _UNBOUNDED, _ITER_LIMIT = -1, 0, 2, 3
@@ -69,6 +75,15 @@ class BatchedSimplexResult:
     iterations: np.ndarray  # [B] int (phase 1 + phase 2 pivots)
     iterations_phase1: np.ndarray | None = None  # [B] int — solver telemetry
     iterations_phase2: np.ndarray | None = None  # [B] int
+    # the exit basis [B, m_rows]: the column id basic in each row at the
+    # final tableau (structural < n, slack in [n, dummy), dummy for retired
+    # artificials/redundant rows).  A later solve of a *perturbed* instance
+    # with the same shape can seed ``warm_basis`` with it and skip phase 1
+    # entirely while it stays primal-feasible.  None when m_rows == 0.
+    basis: np.ndarray | None = None
+    # [B] bool — True where the warm (basis-seeded, phase-2-only) entry
+    # actually served the element; False on cold two-phase solves
+    warm_started: np.ndarray | None = None
 
     @property
     def ok(self) -> np.ndarray:
@@ -153,11 +168,15 @@ def _phase(T, basis, ncols_price, max_iter, bland_after):
     return T, basis, it, status
 
 
-def _setup_one(c, A_ub, b_ub, A_eq, b_eq):
-    """Equilibrate + build the phase-1 tableau/basis for one LP.
+def _standard_rows(c, A_ub, b_ub, A_eq, b_eq):
+    """Equilibrate + sign-flip one LP into its standard-form row block.
 
-    Returns (T, basis, c_scaled, col_scale); T's objective row already holds
-    the phase-1 objective (sum of implicit artificials, priced out).
+    Returns (M, can_slack, c_scaled, col_scale): M is the [m_rows, dummy+2]
+    block with columns [structural | slack | dummy | rhs] (the first m_rows
+    rows of the tableau, objective row excluded); ``can_slack`` marks the
+    rows whose +1 slack can start basic.  Shared by the cold setup and the
+    warm (basis-seeded) entry so both see bit-identical coefficients — the
+    invariant that makes a carried basis meaningful across a perturbation.
     """
     n = c.shape[0]
     m_ub, m_eq = A_ub.shape[0], A_eq.shape[0]
@@ -173,18 +192,35 @@ def _setup_one(c, A_ub, b_ub, A_eq, b_eq):
     slack_sign = jnp.concatenate([jnp.ones(m_ub), jnp.zeros(m_eq)])
     slack_sign = jnp.where(neg, -slack_sign, slack_sign)
 
-    n_slack = m_ub
-    dummy = n + n_slack  # the inert zero column artificials retire onto
+    dummy = n + m_ub  # the inert zero column artificials retire onto
     # columns: [structural | slack | dummy | rhs]
-    T = jnp.zeros((m_rows + 1, dummy + 2))
-    T = T.at[:m_rows, :n].set(A)
-    T = T.at[:m_rows, -1].set(b)
+    M = jnp.zeros((m_rows, dummy + 2))
+    M = M.at[:, :n].set(A)
+    M = M.at[:, -1].set(b)
     rows = jnp.arange(m_rows)
-    T = T.at[rows[:m_ub], n + rows[:m_ub]].set(slack_sign[:m_ub])
+    M = M.at[rows[:m_ub], n + rows[:m_ub]].set(slack_sign[:m_ub])
+    can_slack = jnp.concatenate([~neg[:m_ub], jnp.zeros(m_eq, dtype=bool)])
+    return M, can_slack, c, col_scale
+
+
+def _setup_one(c, A_ub, b_ub, A_eq, b_eq):
+    """Equilibrate + build the phase-1 tableau/basis for one LP.
+
+    Returns (T, basis, c_scaled, col_scale); T's objective row already holds
+    the phase-1 objective (sum of implicit artificials, priced out).
+    """
+    n = c.shape[0]
+    m_ub = A_ub.shape[0]
+    m_rows = m_ub + A_eq.shape[0]
+    dummy = n + m_ub
+
+    M, can_slack, c, col_scale = _standard_rows(c, A_ub, b_ub, A_eq, b_eq)
+    T = jnp.zeros((m_rows + 1, dummy + 2))
+    T = T.at[:m_rows].set(M)
+    rows = jnp.arange(m_rows)
     # initial basis: the +1 slack where the row kept one, else an (implicit)
     # artificial — ids `dummy + 1 + r`, one per row, ordered like the rows so
     # the ratio test's basis-index tie-break matches the NumPy solver
-    can_slack = jnp.concatenate([~neg[:m_ub], jnp.zeros(m_eq, dtype=bool)])
     basis = jnp.where(can_slack, n + rows, dummy + 1 + rows)
 
     # ---- phase 1 objective: minimize the sum of (implicit) artificials ----
@@ -239,7 +275,81 @@ def _extract_one(T, basis, col_scale, c_orig, infeasible, drivable_leftover,
     bad = (status == 1) | (status == 4)
     x = jnp.where(bad, jnp.nan, x)
     obj = jnp.where(bad, jnp.nan, obj)
-    return x, obj, status, it1 + it2, it1, it2
+    # the exit basis rides out with every solve: it is the warm-start seed
+    # for the next solve of a perturbed same-shape instance
+    return x, obj, status, it1 + it2, it1, it2, basis
+
+
+_standard_rows_batch = jax.jit(jax.vmap(_standard_rows))
+
+
+def _warm_verify(c, A_ub, b_ub, A_eq, b_eq, basis):
+    """Basis-seeded verify-first warm entry: accept each carried basis at
+    zero pivots when it is still *optimal* under the (perturbed)
+    coefficients.
+
+    The standard-form rows are rebuilt for the new coefficients through the
+    same jitted ``_standard_rows`` block the cold path compiles (so both
+    entries see bit-identical scaled coefficients), then each lane's basis
+    matrix is factored once and the simplex exit certificate is checked
+    directly: primal feasibility (``B^-1 b >= 0``) and dual feasibility
+    (reduced costs ``c - y A >= 0`` with ``B^T y = c_B``).  Both hold — the
+    usual case after a small coefficient drift — and the vertex is provably
+    optimal with no tableau built and no pivot loop entered, so a lane
+    costs ~R^3/3 flops against the cold path's ~pivots x R x C pivot work.
+    The factorizations run through numpy's *stacked* LAPACK ``solve`` (one C
+    loop over lanes) rather than a vmapped ``jnp.linalg`` call: on CPU the
+    batched-LU lowering is an order of magnitude slower than LAPACK's, and
+    this one-shot verify has no jit win to amortize that.
+
+    Returns ``(x, obj, accept, basis)`` — lanes with ``accept`` False must
+    be cold-solved by the caller: the carried basis was no longer feasible
+    or optimal, the factorization was singular/ill-conditioned (non-finite
+    solve output or a primal/dual residual above tolerance, e.g. a
+    duplicated basis id), or — the ``None`` return — some lane's basis
+    matrix was *exactly* singular, which LAPACK reports batch-wide.
+    Rejection never changes an answer, only its speed.
+    """
+    B, n = c.shape
+    m_ub = A_ub.shape[1]
+    dummy = n + m_ub
+
+    M, _, c_s, col_scale = _standard_rows_batch(c, A_ub, b_ub, A_eq, b_eq)
+    M = np.asarray(M)
+    c_s = np.asarray(c_s)
+    col_scale = np.asarray(col_scale)
+    safe = np.clip(basis, 0, dummy - 1)
+    Bm = np.take_along_axis(M, safe[:, None, :], axis=2)  # [B, R, R]
+    rhs = M[:, :, -1]
+    c_cols = np.zeros((B, dummy))
+    c_cols[:, :n] = c_s  # slack/dummy columns price at 0
+    cB = np.take_along_axis(c_cols, safe, axis=1)
+    try:
+        with np.errstate(all="ignore"):
+            xB = np.linalg.solve(Bm, rhs[..., None])[..., 0]  # basic values
+            y = np.linalg.solve(np.swapaxes(Bm, 1, 2), cB[..., None])[..., 0]
+    except np.linalg.LinAlgError:
+        return None  # an exactly singular basis matrix somewhere: all cold
+    with np.errstate(invalid="ignore"):
+        red = c_cols - np.einsum("br,brj->bj", y, M[:, :, :dummy])
+        primal_resid = np.abs(np.einsum("brk,bk->br", Bm, xB) - rhs).max(axis=1)
+        dual_resid = np.abs(np.einsum("brk,br->bk", Bm, y) - cB).max(axis=1)
+        scale = np.maximum(1.0, np.abs(M).reshape(B, -1).max(axis=1))
+        cscale = np.maximum(1.0, np.abs(c_s).max(axis=1))
+        accept = (
+            np.isfinite(xB).all(axis=1)
+            & np.isfinite(y).all(axis=1)
+            & (primal_resid <= 1e-8 * scale)
+            & (dual_resid <= 1e-8 * cscale)
+            & (xB.min(axis=1, initial=0.0) >= -1e-9)  # still a vertex
+            & (red.min(axis=1, initial=0.0) >= -_EPS)  # no column prices in
+        )
+
+    xfull = np.zeros((B, dummy))
+    np.put_along_axis(xfull, safe, np.where(accept[:, None], xB, 0.0), axis=1)
+    x = col_scale * xfull[:, :n]  # undo column scaling
+    obj = np.einsum("bn,bn->b", c, x)
+    return x, obj, accept, safe
 
 
 def _solve_one(c, A_ub, b_ub, A_eq, b_eq, max_iter):
@@ -457,10 +567,47 @@ def _solve_batch_pallas_compact(c, A_ub, b_ub, A_eq, b_eq, max_iter,
         n=n, dummy=dummy)
 
 
+def _demote_false_optimal(x, status, A_ub, b_ub, A_eq, b_eq):
+    """Batched twin of ``core.backends._primal_violation``: demote "optimal"
+    elements whose iterate violates a primal constraint beyond the
+    feasibility tolerance to status 5 (``false_optimal``).
+
+    The PR-8 campaign caught the serial dense simplex reading "optimal"
+    while a port-serialization row was violated by ~0.24 under an objective
+    *better* than the true optimum; the batched and Pallas drivers run the
+    same pivot arithmetic, so the same silently-lost-pivot escape exists
+    here — and the service's replay certification alone cannot be relied on
+    to catch it (the objective undershoot can sit inside the replay
+    tolerance).  Two batched matvecs make "optimal" mean feasible on every
+    driver exit; demoted elements route to the serial rescue exactly like
+    any other non-optimal status.  Tolerance matches the serial check:
+    ``1e-7 * max(1, max|x|)`` per element.
+    """
+    opt = status == 0
+    if not opt.any():
+        return status
+    B = x.shape[0]
+    viol = np.zeros(B)
+    with np.errstate(invalid="ignore"):
+        if A_ub.shape[1]:
+            viol = np.maximum(
+                viol, (np.einsum("brn,bn->br", A_ub, x) - b_ub).max(axis=1))
+        if A_eq.shape[1]:
+            viol = np.maximum(
+                viol, np.abs(np.einsum("brn,bn->br", A_eq, x) - b_eq).max(axis=1))
+        if x.shape[1]:
+            viol = np.maximum(viol, (-x).max(axis=1))
+            scale = np.maximum(1.0, np.abs(x).max(axis=1))
+        else:
+            scale = np.ones(B)
+        bad = opt & (viol > 1e-7 * scale)
+    return np.where(bad, np.int32(5), status).astype(status.dtype)
+
+
 def solve_simplex_batched(
     c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, max_iter: int = 20_000,
     use_pallas: bool = False, interpret: bool | None = None,
-    compact: bool | None = None,
+    compact: bool | None = None, warm_basis=None,
 ) -> BatchedSimplexResult:
     """Solve a batch of LPs of identical shape.
 
@@ -477,6 +624,18 @@ def solve_simplex_batched(
     parity reference).  ``interpret`` follows the kernels' usual gate
     (None = interpret off-TPU).  LPs with no constraint rows keep the
     vmapped path (an empty tableau has nothing to fuse).
+
+    ``warm_basis`` ([B, m_rows] int, ``-1``-filled rows meaning "no seed")
+    enables the basis-seeded entry: elements whose carried basis is entirely
+    structural/slack ids are verified against the new coefficients with one
+    dense factorization (primal feasibility + reduced-cost optimality, the
+    simplex exit certificate) and served at zero pivots when it holds; any
+    element whose seed is rejected — no longer feasible or optimal under
+    the new coefficients, or singular — falls back to the cold two-phase
+    drivers transparently.  ``result.warm_started`` records
+    which elements the warm entry actually served, and ``result.basis``
+    carries every element's exit basis for the *next* replan.  Warm-start
+    therefore never changes which elements solve, only how fast.
     """
     c = np.asarray(c, dtype=np.float64)
     B, n = c.shape
@@ -491,26 +650,82 @@ def solve_simplex_batched(
     # batches host->device transfers; explicit per-array jnp.asarray costs
     # ~100us per array and was a measurable share of small-bucket solves)
     with enable_x64():
-        if use_pallas and m_rows > 0:
-            from repro.kernels.ops import _interp  # the kernels' TPU gate
+        x = np.empty((B, n))
+        obj = np.empty(B)
+        status = np.empty(B, np.int32)
+        iters = np.empty(B, np.int32)
+        it1 = np.empty(B, np.int32)
+        it2 = np.empty(B, np.int32)
+        basis_out = np.empty((B, m_rows), np.int64) if m_rows else None
+        warm_started = np.zeros(B, dtype=bool)
 
-            if compact is None:
-                compact = B >= 2  # epochs only pay off with lanes to retire
-            driver = (_solve_batch_pallas_compact if compact
-                      else _solve_batch_pallas)
-            x, obj, status, iters, it1, it2 = driver(
-                c, A_ub, b_ub, A_eq, b_eq, int(max_iter),
-                _interp(interpret),
-            )
-        else:
-            x, obj, status, iters, it1, it2 = _solve_batch(
-                c, A_ub, b_ub, A_eq, b_eq, int(max_iter),
-            )
+        cold_idx = np.arange(B)
+        if warm_basis is not None and m_rows > 0 and B > 0:
+            wb = np.asarray(warm_basis)
+            if wb.shape != (B, m_rows):
+                raise ValueError(
+                    f"warm_basis must be [B={B}, m_rows={m_rows}]; got {wb.shape}")
+            wb = wb.astype(np.int64)
+            dummy = n + A_ub.shape[1]
+            cand_idx = np.flatnonzero(np.all((wb >= 0) & (wb < dummy), axis=1))
+            verified = _warm_verify(
+                c[cand_idx], A_ub[cand_idx], b_ub[cand_idx],
+                A_eq[cand_idx], b_eq[cand_idx], wb[cand_idx],
+            ) if cand_idx.size else None
+            if verified is not None:
+                wx, wobj, ok, wbasis = verified
+                # accept only certified warm exits: a rejected seed re-solves
+                # cold below, so the warm entry can never worsen an outcome,
+                # only speed it up
+                good = cand_idx[ok]
+                if good.size:
+                    x[good] = wx[ok]
+                    obj[good] = wobj[ok]
+                    status[good] = _OPTIMAL
+                    iters[good] = 0
+                    it1[good] = 0
+                    it2[good] = 0
+                    basis_out[good] = wbasis[ok]
+                    warm_started[good] = True
+                    cold_mask = np.ones(B, dtype=bool)
+                    cold_mask[good] = False
+                    cold_idx = np.flatnonzero(cold_mask)
+
+        if cold_idx.size:
+            sub = cold_idx.size < B
+            ci, Aui, bui = (c[cold_idx], A_ub[cold_idx], b_ub[cold_idx]) if sub \
+                else (c, A_ub, b_ub)
+            Aei, bei = (A_eq[cold_idx], b_eq[cold_idx]) if sub else (A_eq, b_eq)
+            if use_pallas and m_rows > 0:
+                from repro.kernels.ops import _interp  # the kernels' TPU gate
+
+                cc = compact
+                if cc is None:
+                    cc = len(cold_idx) >= 2  # epochs need lanes to retire
+                driver = (_solve_batch_pallas_compact if cc
+                          else _solve_batch_pallas)
+                out = driver(ci, Aui, bui, Aei, bei, int(max_iter),
+                             _interp(interpret))
+            else:
+                out = _solve_batch(ci, Aui, bui, Aei, bei, int(max_iter))
+            cx, cobj, cst, cit, cit1, cit2, cbasis = out
+            x[cold_idx] = np.asarray(cx)
+            obj[cold_idx] = np.asarray(cobj)
+            status[cold_idx] = np.asarray(cst)
+            iters[cold_idx] = np.asarray(cit)
+            it1[cold_idx] = np.asarray(cit1)
+            it2[cold_idx] = np.asarray(cit2)
+            if basis_out is not None:
+                basis_out[cold_idx] = np.asarray(cbasis)
+
+        status = _demote_false_optimal(x, status, A_ub, b_ub, A_eq, b_eq)
         return BatchedSimplexResult(
-            x=np.asarray(x),
-            objective=np.asarray(obj),
-            status=np.asarray(status),
-            iterations=np.asarray(iters),
-            iterations_phase1=np.asarray(it1),
-            iterations_phase2=np.asarray(it2),
+            x=x,
+            objective=obj,
+            status=status,
+            iterations=iters,
+            iterations_phase1=it1,
+            iterations_phase2=it2,
+            basis=basis_out,
+            warm_started=warm_started,
         )

@@ -11,6 +11,7 @@ and cheap, so a hit returns the same executable schedule the solver would.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -57,12 +58,20 @@ class SolutionCache:
         self.max_entries = max_entries
         self.quantum = quantum
         self._store: dict[str, CachedSolution] = {}
+        # one lock over every store/counter mutation: the LRU touch is a
+        # del+reinsert pair and eviction is a read-modify-write loop — both
+        # corrupt under concurrent Sessions without mutual exclusion
+        # (counters drift, touched entries vanish).  Reentrant because
+        # lookup_many is get's bulk twin and either may sit under a Session
+        # already holding it.
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def key(self, inst: Instance, objective: str = "makespan") -> str:
         return instance_key(inst, objective=objective, quantum=self.quantum)
@@ -80,20 +89,21 @@ class SolutionCache:
         taking the registry lock per instance — measurable on warm-cache
         ``solve_bulk`` where the lookup loop IS the hot path.
         """
-        store = self._store
         sols: list = []
         hits = 0
-        for k in keys:
-            sol = store.get(k)
-            if sol is not None:
-                hits += 1
-                # LRU touch: re-insert at the dict tail
-                del store[k]
-                store[k] = sol
-            sols.append(sol)
-        misses = len(keys) - hits
-        self.hits += hits
-        self.misses += misses
+        with self._lock:
+            store = self._store
+            for k in keys:
+                sol = store.get(k)
+                if sol is not None:
+                    hits += 1
+                    # LRU touch: re-insert at the dict tail
+                    del store[k]
+                    store[k] = sol
+                sols.append(sol)
+            misses = len(keys) - hits
+            self.hits += hits
+            self.misses += misses
         reg = obs_metrics.get_registry()
         if hits:
             reg.inc("repro_cache_hits_total", hits)
@@ -102,26 +112,28 @@ class SolutionCache:
         return sols
 
     def get(self, key: str) -> CachedSolution | None:
-        sol = self._store.get(key)
-        if sol is None:
-            self.misses += 1
-            obs_metrics.get_registry().inc("repro_cache_misses_total")
-            return None
-        self.hits += 1
-        obs_metrics.get_registry().inc("repro_cache_hits_total")
-        # LRU touch: re-insert to the dict tail (dicts are insertion-ordered)
-        del self._store[key]
-        self._store[key] = sol
-        return sol
+        with self._lock:
+            sol = self._store.get(key)
+            if sol is None:
+                self.misses += 1
+                obs_metrics.get_registry().inc("repro_cache_misses_total")
+                return None
+            self.hits += 1
+            obs_metrics.get_registry().inc("repro_cache_hits_total")
+            # LRU touch: re-insert to the dict tail (dicts are insertion-ordered)
+            del self._store[key]
+            self._store[key] = sol
+            return sol
 
     def put(self, key: str, sol: CachedSolution) -> None:
-        if key in self._store:
-            del self._store[key]
-        self._store[key] = sol
-        while len(self._store) > self.max_entries:
-            self._store.pop(next(iter(self._store)))
-            self.evictions += 1
-            obs_metrics.get_registry().inc("repro_cache_evictions_total")
+        with self._lock:
+            if key in self._store:
+                del self._store[key]
+            self._store[key] = sol
+            while len(self._store) > self.max_entries:
+                self._store.pop(next(iter(self._store)))
+                self.evictions += 1
+                obs_metrics.get_registry().inc("repro_cache_evictions_total")
 
     def stats(self) -> dict:
         """Per-cache counters in the historical dict shape.
@@ -132,10 +144,11 @@ class SolutionCache:
            The dict shape is frozen for the old call sites; new keys are
            appended, never renamed.
         """
-        total = self.hits + self.misses
-        return {
-            "entries": len(self._store),
-            "hits": self.hits,
-            "misses": self.misses,
-            "hit_rate": self.hits / total if total else 0.0,
-        }
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._store),
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+            }

@@ -130,6 +130,7 @@ def solve_bulk(
     fallback: bool = True,
     validate: bool = True,
     use_pallas: bool = False,
+    warm_starts: list | None = None,
 ) -> list:
     """Solve many instances at once; returns ``LPResult``s in caller order.
 
@@ -142,6 +143,14 @@ def solve_bulk(
     through the fused Pallas kernels (repro.kernels.simplex_pivot /
     asap_replay); results and statuses are parity-identical to the vmapped
     path, only the reported ``backend`` label changes to ``"pallas"``.
+
+    ``warm_starts`` (optional, parallel to ``instances``) carries per-
+    instance exit bases from a previous solve of a perturbed sibling; rows
+    with a usable basis enter the simplex phase-2-only (replan hot path),
+    everything else — ``None`` entries, shape mismatches, rejected seeds —
+    solves cold, identically to omitting the argument.  The exit basis of
+    every engine-solved instance rides back in
+    ``result.telemetry["lp"]["final_basis"]`` for the *next* replan.
     """
     label = "pallas" if use_pallas else "batched"
     if objective != "makespan":
@@ -179,12 +188,14 @@ def solve_bulk(
         for bucket in arena.buckets:
             _solve_bucket(bucket, instances, results, keys, pending, cache,
                           label, use_pallas, fallback, validate, met,
-                          {"cache_lookup_s": cache_s, "pack_s": pack_s})
+                          {"cache_lookup_s": cache_s, "pack_s": pack_s},
+                          warm_starts)
     return results
 
 
 def _solve_bucket(bucket, instances, results, keys, pending, cache, label,
-                  use_pallas, fallback, validate, met, shared_stages) -> None:
+                  use_pallas, fallback, validate, met, shared_stages,
+                  warm_starts=None) -> None:
     """Solve one packed bucket in place: LP build -> batched simplex ->
     batched ASAP replay -> certify-or-rescue, with per-stage timings and
     solver telemetry recorded on every report (DESIGN.md §8)."""
@@ -199,11 +210,20 @@ def _solve_bucket(bucket, instances, results, keys, pending, cache, label,
             c = np.tile(lp.c, (B, 1))  # objective pattern is bucket-constant
         lp_build_s = time.perf_counter() - t0
 
+        n_rows = lp.A_ub.shape[1] + lp.A_eq.shape[1]
+        wb = None
+        if warm_starts is not None:
+            wb = bucket.basis_padded(
+                [warm_starts[pending[i]] for i in bucket.indices], n_rows)
+
         t0 = time.perf_counter()
         with span("engine.simplex", B=B, rows=len(lp.b_ub) + len(lp.b_eq)):
             res = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq,
-                                        use_pallas=use_pallas)
+                                        use_pallas=use_pallas, warm_basis=wb)
         simplex_s = time.perf_counter() - t0
+        if wb is not None:
+            met.inc("repro_simplex_warm_starts_total",
+                    int(res.warm_started.sum()), path=label)
         met.inc("repro_simplex_pivots_total",
                 int(res.iterations_phase1.sum()), phase="1", path=label)
         met.inc("repro_simplex_pivots_total",
@@ -230,14 +250,21 @@ def _solve_bucket(bucket, instances, results, keys, pending, cache, label,
                        "q": [int(x) for x in bucket.q]}
 
         def telem(b: int, extra: dict | None = None) -> dict:
+            lp_info = {
+                "pivots_phase1": int(res.iterations_phase1[b]),
+                "pivots_phase2": int(res.iterations_phase2[b]),
+                "status": res.status_str(b),
+                # warm-start provenance: whether the seed served this element,
+                # and the exit basis (JSON-safe ints) the next replan may seed
+                # from — the basis rides the artifact, not solver state
+                "warm": bool(res.warm_started[b]) if res.warm_started is not None else False,
+            }
+            if res.basis is not None:
+                lp_info["final_basis"] = [int(v) for v in res.basis[b]]
             out = {
                 "stages": dict(stages),
                 "bucket": dict(bucket_info),
-                "lp": {
-                    "pivots_phase1": int(res.iterations_phase1[b]),
-                    "pivots_phase2": int(res.iterations_phase2[b]),
-                    "status": res.status_str(b),
-                },
+                "lp": lp_info,
             }
             if extra:
                 out.update(extra)
@@ -354,6 +381,7 @@ class BatchedBackend(SolverBackend):
             if self._batchable(req):
                 by_validate.setdefault(req.validate, []).append(i)
         for validate, bulk_idxs in by_validate.items():
+            warm = [requests[i].warm_basis for i in bulk_idxs]
             results = solve_bulk(
                 [requests[i].instance for i in bulk_idxs],
                 objective="makespan",
@@ -361,6 +389,7 @@ class BatchedBackend(SolverBackend):
                 fallback=self.fallback,
                 validate=validate,
                 use_pallas=self.use_pallas,
+                warm_starts=warm if any(w is not None for w in warm) else None,
             )
             for i, res in zip(bulk_idxs, results):
                 reports[i] = SolveReport.from_result(res, requests[i])

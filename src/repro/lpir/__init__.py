@@ -39,7 +39,7 @@ from .ir import (
     emit_schedule_ir,
 )
 from .lower import DenseBatch, SparseRows, lower_dense, lower_dense_batch, lower_sparse
-from .views import BucketView, EqualFinishView, InstanceView
+from .views import BucketView, EqualFinishView, InstanceView, PerturbedView
 
 __all__ = [
     "Row",
@@ -51,6 +51,7 @@ __all__ = [
     "InstanceView",
     "BucketView",
     "EqualFinishView",
+    "PerturbedView",
     "SparseRows",
     "DenseBatch",
     "lower_sparse",

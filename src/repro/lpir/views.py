@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["InstanceView", "BucketView", "EqualFinishView"]
+__all__ = ["InstanceView", "BucketView", "EqualFinishView", "PerturbedView"]
 
 
 class InstanceView:
@@ -116,6 +116,80 @@ class BucketView:
 
     def w(self, i, t):
         return self.bucket.w_cell[:, i, t]
+
+
+class PerturbedView:
+    """A coefficient overlay on any base view — same structure, new numbers.
+
+    The replanning building block: online events (a link slowing down, an
+    availability date slipping, a release arriving late) change LP
+    *coefficients* but not the row pattern, so a basis carried from the base
+    view's solve is a legal warm-start seed for the perturbed LP.  This view
+    makes that invariant explicit and testable: it delegates every
+    structural attribute (``m``, ``T``, ``topology``, ``load_of_cell``, ...)
+    to the base view verbatim and only overrides the named coefficient
+    accessors.
+
+    Overrides are per-index maps, e.g. ``PerturbedView(base, w={(1, 0):
+    2.5}, z={0: 0.3}, tau={2: 1.0}, rel={1: 4.0})`` — any index not named
+    falls through to the base.  Structural perturbations (processor loss, a
+    new load) are NOT expressible here by design: those change the row
+    pattern and must rebuild the view (and solve cold).
+    """
+
+    _SCALAR = ("z", "K", "tau", "comm_floor", "vcomm", "vcomp", "rel", "ret")
+
+    def __init__(self, base, w: dict | None = None, **overrides):
+        unknown = set(overrides) - set(self._SCALAR)
+        if unknown:
+            raise ValueError(
+                f"unknown coefficient families {sorted(unknown)}; "
+                f"perturbable: {sorted(self._SCALAR + ('w',))}")
+        self.base = base
+        self.m = base.m
+        self.T = base.T
+        self.batch = base.batch
+        self.load_of_cell = base.load_of_cell
+        self.n_loads = base.n_loads
+        self.topology = base.topology
+        self.has_returns = base.has_returns
+        self._w = dict(w or {})
+        self._over = {k: dict(v) for k, v in overrides.items()}
+
+    def _get(self, family: str, idx):
+        over = self._over.get(family)
+        if over is not None and idx in over:
+            return float(over[idx])
+        return getattr(self.base, family)(idx)
+
+    def z(self, i):
+        return self._get("z", i)
+
+    def K(self, i):
+        return self._get("K", i)
+
+    def tau(self, i):
+        return self._get("tau", i)
+
+    def comm_floor(self, i):
+        return self._get("comm_floor", i)
+
+    def vcomm(self, t):
+        return self._get("vcomm", t)
+
+    def vcomp(self, t):
+        return self._get("vcomp", t)
+
+    def rel(self, t):
+        return self._get("rel", t)
+
+    def ret(self, t):
+        return self._get("ret", t)
+
+    def w(self, i, t):
+        if (i, t) in self._w:
+            return float(self._w[(i, t)])
+        return self.base.w(i, t)
 
 
 class EqualFinishView:

@@ -1,5 +1,13 @@
-"""Distributed runtime: sharding rules, step builders, DLT chain runner, FT."""
+"""Distributed runtime: sharding rules, step builders, DLT chain runner,
+event-stream replanning, FT."""
 
+from .replan import (
+    EventStreamReplanner,
+    LoadArrived,
+    ProcessorDown,
+    ProcessorUp,
+    SpeedObserved,
+)
 from .sharding import batch_specs, cache_specs, param_specs, shardings_for
 from .train import TrainState, make_serve_step, make_train_state, make_train_step
 
@@ -12,4 +20,9 @@ __all__ = [
     "make_train_state",
     "make_train_step",
     "make_serve_step",
+    "EventStreamReplanner",
+    "LoadArrived",
+    "ProcessorDown",
+    "ProcessorUp",
+    "SpeedObserved",
 ]

@@ -67,7 +67,31 @@ class ChainReplanner:
         # first engine use) — touching it here just pins the sharing intent
         self.session = planner.session
 
+    def stream(self, batches: list, policy=None, warm: bool = True):
+        """Open an online :class:`repro.runtime.replan.EventStreamReplanner`
+        for this chain's current problem.
+
+        The streaming successor of the offline what-ifs below (``replan`` /
+        ``on_failure`` / ``what_if_speeds``): instead of re-stating a
+        hypothetical per call, feed typed events (``SpeedObserved``,
+        ``ProcessorDown``, ...) to the returned replanner — each re-solve
+        warm-starts from the previous exit basis through this replanner's
+        session, and subscribers see every plan update.
+        """
+        from repro.api import Policy
+        from repro.runtime.replan import EventStreamReplanner
+
+        if policy is None:
+            backend = self.backend if isinstance(self.backend, str) else "auto"
+            policy = Policy(installments=self.q, backend=backend)
+        return EventStreamReplanner(
+            self.session, self.planner.to_problem(batches), policy,
+            warm=warm,
+            backend=None if isinstance(self.backend, str) else self.backend,
+        )
+
     def replan(self, batches: list) -> DLTPlan:
+        """One offline re-solve (see :meth:`stream` for the online path)."""
         return self.planner.plan(batches, q=self.q, backend=self.backend)
 
     def observe(self, stage: int, achieved_flops_per_sec: float, batches: list):

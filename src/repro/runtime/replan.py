@@ -1,0 +1,315 @@
+"""Event-stream replanning: live traffic in, plan updates out.
+
+The paper's central claim is that staying optimal under change means
+*re-solving the LP*, not patching the old schedule — the Min/Veeravalli/
+Barlas-style heuristics drift or fail outright once the instance moves
+(cs/0702066 catalogs the failure modes).  This module is the online half of
+that claim: a typed event log describes what changed on the platform, an
+:class:`EventStreamReplanner` folds each event into the current
+:class:`repro.api.Problem` and re-solves through one
+:class:`repro.api.Session`, and subscribers (``session.subscribe``) receive
+every updated :class:`repro.api.PlanArtifact` as it lands.
+
+Two replan regimes, chosen per event:
+
+* **warm** — coefficient-only events (:class:`SpeedObserved`) preserve the
+  LP's row pattern (the :class:`repro.lpir.PerturbedView` invariant), so the
+  previous solve's exit basis seeds the engine's basis-seeded simplex entry
+  and the re-solve usually pays zero phase-1 pivots.  A seed the engine
+  rejects (the old vertex is no longer feasible) falls back to a cold
+  two-phase solve inside the solver — never a wrong answer, only a slower
+  one.
+* **cold** — structural events (:class:`LoadArrived`,
+  :class:`ProcessorDown`, :class:`ProcessorUp`) change the LP's shape, so
+  the carried basis is meaningless and is dropped before the solve.
+
+Every replanned artifact carries a ``{"kind": "replan", ...}`` provenance
+event recording the trigger, the warm/cold decision, the engine's actual
+basis reuse, and the pivot counts — the serving audit trail DESIGN.md §11
+specifies.
+
+This supersedes the offline what-if surface on
+:class:`repro.runtime.dlt_runner.ChainReplanner` (``replan`` /
+``replan_without_stage`` / ``what_if_speeds``): those re-solve hypotheticals
+from scratch per call; this consumes an ordered stream and carries solver
+state (basis, cache, subscriptions) across solves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api import Policy, Problem, Session
+from repro.obs import metrics as obs_metrics
+
+__all__ = [
+    "LoadArrived",
+    "ProcessorDown",
+    "ProcessorUp",
+    "SpeedObserved",
+    "EventStreamReplanner",
+]
+
+
+# ---------------- the event vocabulary ----------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadArrived:
+    """A new divisible load enters the system (structural: adds LP columns
+    and rows, so the next solve is cold).  ``deadline`` (optional, absolute
+    seconds) is recorded in the replan provenance together with whether the
+    re-solved makespan meets it — the LP itself stays a pure makespan
+    minimization (the paper's objective)."""
+
+    v_comm: float
+    v_comp: float
+    release: float = 0.0
+    return_ratio: float = 0.0
+    deadline: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessorDown:
+    """Processor ``index`` leaves.  Chain: its two incident links fuse
+    (rates add in series, latencies sum — the store-and-forward path through
+    the hole).  Star: the worker and its private link drop (the master,
+    index 0, holds the data and cannot leave).  ``restore_delay`` floors the
+    survivors' availability dates (checkpoint-restore time)."""
+
+    index: int
+    restore_delay: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessorUp:
+    """A processor joins at the tail of the chain (or as a new star worker)
+    with its own link.  Structural: the next solve is cold."""
+
+    w: float
+    z: float
+    latency: float = 0.0
+    tau: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedObserved:
+    """Processor ``index`` is measured at ``w`` seconds/unit (straggler
+    drift, thermal throttling, a time-shared host changing share — the
+    arXiv 1902.01898 regime).  Coefficient-only: the LP row pattern is
+    unchanged, so the previous basis warm-starts the re-solve."""
+
+    index: int
+    w: float
+
+
+# events that keep the LP row pattern (and therefore the carried basis) valid
+_COEFFICIENT_EVENTS = (SpeedObserved,)
+
+
+# ---------------- event -> Problem folding ----------------
+
+
+def _fold(problem: Problem, event) -> Problem:
+    """The successor Problem after ``event`` (pure; raises on impossible
+    events, e.g. dropping the star master or the last processor)."""
+    if isinstance(event, SpeedObserved):
+        m = len(problem.w)
+        if not 0 <= event.index < m:
+            raise ValueError(f"SpeedObserved.index {event.index} out of range [0, {m})")
+        w = list(problem.w)
+        w[event.index] = float(event.w)
+        wpl = problem.w_per_load
+        if wpl is not None:
+            # unrelated-machine model: a speed observation rescales the whole
+            # row (the per-load affinities are relative to the base speed)
+            old = problem.w[event.index]
+            scale = float(event.w) / old if old else 1.0
+            wpl = tuple(
+                tuple(v * scale for v in row) if i == event.index else row
+                for i, row in enumerate(wpl)
+            )
+        return _rebuild(problem, w=w, w_per_load=wpl)
+
+    if isinstance(event, LoadArrived):
+        if event.deadline is not None and event.deadline < event.release:
+            raise ValueError("LoadArrived.deadline precedes its release date")
+        wpl = problem.w_per_load
+        if wpl is not None:
+            # new load's per-processor cost defaults to the base speeds
+            wpl = tuple(row + (problem.w[i],) for i, row in enumerate(wpl))
+        return _rebuild(
+            problem,
+            v_comm=problem.v_comm + (float(event.v_comm),),
+            v_comp=problem.v_comp + (float(event.v_comp),),
+            release=problem.release + (float(event.release),),
+            return_ratio=problem.return_ratio + (float(event.return_ratio),),
+            w_per_load=wpl,
+        )
+
+    if isinstance(event, ProcessorUp):
+        wpl = problem.w_per_load
+        if wpl is not None:
+            wpl = wpl + (tuple(float(event.w) for _ in problem.v_comm),)
+        return _rebuild(
+            problem,
+            w=problem.w + (float(event.w),),
+            z=problem.z + (float(event.z),),
+            latency=problem.latency + (float(event.latency),),
+            tau=problem.tau + (float(event.tau),),
+            w_per_load=wpl,
+        )
+
+    if isinstance(event, ProcessorDown):
+        d, m = event.index, len(problem.w)
+        if not 0 <= d < m:
+            raise ValueError(f"ProcessorDown.index {d} out of range [0, {m})")
+        if m <= 1:
+            raise ValueError("cannot drop the last processor")
+        z, lat = list(problem.z), list(problem.latency)
+        if problem.topology == "star":
+            if d == 0:
+                raise ValueError("cannot drop the star master (it holds the data)")
+            del z[d - 1], lat[d - 1]
+        elif d == 0:
+            del z[0], lat[0]
+        elif d == m - 1:
+            del z[-1], lat[-1]
+        else:
+            # store-and-forward through the hole: rates add in series,
+            # latencies sum (Planner.replan_without_stage's link fusion)
+            z[d - 1 : d + 1] = [z[d - 1] + z[d]]
+            lat[d - 1 : d + 1] = [lat[d - 1] + lat[d]]
+        keep = [i for i in range(m) if i != d]
+        tau = [max(problem.tau[i], float(event.restore_delay)) for i in keep]
+        wpl = problem.w_per_load
+        if wpl is not None:
+            wpl = tuple(wpl[i] for i in keep)
+        return _rebuild(
+            problem,
+            w=[problem.w[i] for i in keep],
+            z=z, latency=lat, tau=tau, w_per_load=wpl,
+        )
+
+    raise TypeError(f"unknown replan event {type(event).__name__}")
+
+
+def _rebuild(problem: Problem, **changes) -> Problem:
+    kw = dict(
+        w=problem.w, z=problem.z, v_comm=problem.v_comm, v_comp=problem.v_comp,
+        topology=problem.topology, tau=problem.tau, latency=problem.latency,
+        release=problem.release, return_ratio=problem.return_ratio,
+        w_per_load=problem.w_per_load,
+    )
+    kw.update(changes)
+    return Problem(**kw)
+
+
+# ---------------- the replanner ----------------
+
+
+class EventStreamReplanner:
+    """Fold a live event stream into successive LP re-solves.
+
+    One replanner tracks one evolving problem through one session.  Each
+    :meth:`apply` folds the event into the current problem, re-solves —
+    warm-started from the previous exit basis when the event preserves the
+    LP row pattern and ``warm=True`` — and publishes the artifact to the
+    attached :class:`repro.api.PlanSubscription` (created via
+    ``session.subscribe`` when not handed in).
+
+    The carried basis is pure data riding the artifacts
+    (``telemetry["lp"]["final_basis"]``): the replanner owns no solver
+    state, so it serializes/restarts trivially — rebuild it from the last
+    artifact and keep consuming the stream.
+    """
+
+    def __init__(
+        self,
+        session: Session,
+        problem: Problem,
+        policy: Policy | None = None,
+        *,
+        warm: bool = True,
+        backend=None,
+        subscription=None,
+        solve_initial: bool = True,
+    ):
+        self.session = session
+        self.policy = policy if policy is not None else session.policy
+        self.warm = warm
+        self.backend = backend
+        self.problem = problem
+        self.artifact = None
+        self._basis = None
+        self.events: list = []  # the applied log, in order
+        if solve_initial:
+            self.artifact = session.solve(problem, self.policy, backend=backend)
+            self._basis = self._extract_basis(self.artifact)
+        self.subscription = (
+            subscription
+            if subscription is not None
+            else session.subscribe(problem, self.policy, backend=backend,
+                                   artifact=self.artifact)
+        )
+
+    @staticmethod
+    def _extract_basis(artifact):
+        """The engine exit basis riding ``artifact`` (None when absent —
+        serial backends, failed solves, v1 documents)."""
+        telem = getattr(artifact, "telemetry", None)
+        if not telem:
+            return None
+        return (telem.get("lp") or {}).get("final_basis")
+
+    def apply(self, event):
+        """Fold one event, re-solve, publish; returns the new artifact."""
+        trigger = type(event).__name__
+        self.problem = _fold(self.problem, event)
+        structural = not isinstance(event, _COEFFICIENT_EVENTS)
+        seed = None if (structural or not self.warm) else self._basis
+        art = self.session.solve(
+            self.problem, self.policy, backend=self.backend, warm_basis=seed,
+        )
+
+        telem = getattr(art, "telemetry", None) or {}
+        lp = telem.get("lp") or {}
+        # cache hits carry no exit basis; the coefficients are (quantized-)
+        # identical to the solve that populated the slot, so the basis we
+        # already hold stays valid for the NEXT perturbation.  Structural
+        # events invalidate it regardless of how this solve was served.
+        new_basis = lp.get("final_basis")
+        if new_basis is not None:
+            self._basis = new_basis
+        elif structural:
+            self._basis = None
+
+        provenance = {
+            "kind": "replan",
+            "trigger": trigger,
+            "warm_requested": seed is not None,
+            "warm": bool(lp.get("warm", False)),
+            "cache_hit": bool(art.cache_hit),
+            "pivots_phase1": lp.get("pivots_phase1"),
+            "pivots_phase2": lp.get("pivots_phase2"),
+        }
+        if isinstance(event, LoadArrived) and event.deadline is not None:
+            provenance["deadline"] = float(event.deadline)
+            provenance["deadline_met"] = bool(art.ok and art.makespan <= event.deadline)
+        if art.version >= 2:
+            art = dataclasses.replace(art, events=art.events + (provenance,))
+
+        self.artifact = art
+        self.events.append(event)
+        met = obs_metrics.get_registry()
+        met.inc("repro_replan_events_total", trigger=trigger,
+                warm=str(provenance["warm"]).lower())
+        self.subscription.publish(art, problem=self.problem)
+        return art
+
+    def replay(self, events) -> list:
+        """Apply an ordered event batch; returns the artifacts, one per event."""
+        return [self.apply(ev) for ev in events]
+
+    def close(self) -> None:
+        self.subscription.close()

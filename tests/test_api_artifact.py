@@ -101,3 +101,50 @@ def test_provenance_fields():
                                    cross_check=True))
     assert checked.ok and checked.fallback_events
     assert checked.fallback_events[0].startswith("served_by:")
+
+
+def test_diff_v1_vs_v2_round_trip_regression():
+    # the version seam: a v1 document (no events/telemetry keys) diffed
+    # against a live v2 artifact must neither crash nor mis-report.  Build
+    # the v1 document the way old processes did — serialize, strip the v2
+    # keys, mark version 1 — and round-trip it first.
+    sess = Session()
+    pol = Policy(installments=2, backend="batched")
+    v2 = sess.solve(_problem(), pol)
+    assert v2.version == ARTIFACT_VERSION and v2.telemetry is not None
+    d = v2.to_dict()
+    for k in ("events", "telemetry"):
+        d.pop(k, None)
+    d["version"] = 1
+    v1 = PlanArtifact.from_dict(d)
+    assert v1.version == 1 and v1.telemetry is None and v1.events == ()
+    # v1 round-trips bit-stably without growing v2 keys
+    s = v1.to_json()
+    assert PlanArtifact.from_json(s).to_json() == s
+    assert '"telemetry"' not in s and '"events"' not in s
+    # decision diff: same plan, both directions, with and without provenance
+    assert v1.diff(v2) == {}
+    assert v2.diff(v1) == {}
+    pd = v2.diff(v1, include_provenance=True)
+    assert pd.get("version") == (2, 1)  # the seam is reported, not silenced
+    assert "events" not in pd  # v1's absent events are never compared
+    # two v2 artifacts DO compare events under provenance
+    replanned = dataclasses.replace(
+        v2, events=v2.events + ({"kind": "replan", "trigger": "SpeedObserved"},))
+    assert "events" in v2.diff(replanned, include_provenance=True)
+    assert v2.diff(replanned) == {}  # decision untouched
+
+
+def test_diff_nan_gamma_mismatch_is_reported():
+    # regression: a failed plan (all-NaN gamma) used to diff CLEAN against a
+    # solved one — NaN differences were zeroed by nan_to_num
+    sess = Session()
+    ok = sess.solve(_problem(), Policy(installments=2, backend="simplex"))
+    failed = dataclasses.replace(
+        ok, gamma=np.full_like(ok.gamma, np.nan), makespan=float("nan"),
+        status="error")
+    d = ok.diff(failed)
+    assert d.get("gamma") == "nan-pattern"
+    assert "status" in d and "makespan" in d
+    # identical NaN patterns still diff clean (two failed plans)
+    assert failed.diff(dataclasses.replace(failed)) == {}

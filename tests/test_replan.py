@@ -1,0 +1,416 @@
+"""Online replanning: event folding, warm-start provenance, subscriptions,
+and the concurrency regression hammers (Session ticket bookkeeping + cache
+LRU counters under >= 8 threads).
+"""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import PlanSubscription, Policy, Problem, Session
+from repro.runtime.replan import (
+    EventStreamReplanner,
+    LoadArrived,
+    ProcessorDown,
+    ProcessorUp,
+    SpeedObserved,
+    _fold,
+)
+
+
+def _problem(topology="chain", m=3):
+    return Problem(
+        w=[1.0 + 0.25 * i for i in range(m)],
+        z=[0.1 + 0.05 * i for i in range(m - 1)],
+        v_comm=[1.0, 2.0],
+        v_comp=[3.0, 4.0],
+        latency=0.05,
+        release=[0.0, 0.5],
+        topology=topology,
+    )
+
+
+# ---------------- event -> Problem folding ----------------
+
+
+def test_fold_speed_observed_only_touches_one_coefficient():
+    p = _problem()
+    p2 = _fold(p, SpeedObserved(1, 9.0))
+    assert p2.w == (p.w[0], 9.0, p.w[2])
+    for f in ("z", "tau", "latency", "v_comm", "v_comp", "release",
+              "return_ratio", "topology"):
+        assert getattr(p2, f) == getattr(p, f)
+
+
+def test_fold_load_arrived_appends_load():
+    p = _problem()
+    p2 = _fold(p, LoadArrived(v_comm=0.5, v_comp=1.5, release=2.0,
+                              return_ratio=0.25))
+    assert p2.v_comm == p.v_comm + (0.5,)
+    assert p2.v_comp == p.v_comp + (1.5,)
+    assert p2.release == p.release + (2.0,)
+    assert p2.return_ratio == p.return_ratio + (0.25,)
+    assert p2.w == p.w  # platform untouched
+    with pytest.raises(ValueError, match="deadline"):
+        _fold(p, LoadArrived(v_comm=1, v_comp=1, release=5.0, deadline=4.0))
+
+
+def test_fold_processor_down_chain_fuses_links():
+    p = _problem(m=4)
+    p2 = _fold(p, ProcessorDown(1, restore_delay=0.5))
+    assert len(p2.w) == 3 and p2.w == (p.w[0], p.w[2], p.w[3])
+    # store-and-forward through the hole: rates and latencies sum
+    assert p2.z == pytest.approx((p.z[0] + p.z[1], p.z[2]))
+    assert p2.latency == pytest.approx(
+        (p.latency[0] + p.latency[1], p.latency[2]))
+    assert all(t == 0.5 for t in p2.tau)  # restore floors availability
+    # endpoints just drop their single link
+    head = _fold(p, ProcessorDown(0))
+    assert head.z == p.z[1:]
+    tail = _fold(p, ProcessorDown(3))
+    assert tail.z == p.z[:-1]
+
+
+def test_fold_processor_down_star_guards_master():
+    p = _problem(topology="star", m=4)
+    p2 = _fold(p, ProcessorDown(2))
+    assert len(p2.w) == 3
+    assert p2.z == (p.z[0], p.z[2])  # the worker's private link drops
+    with pytest.raises(ValueError, match="master"):
+        _fold(p, ProcessorDown(0))
+    one = Problem(w=[1.0], z=[], v_comm=[1.0], v_comp=[1.0])
+    with pytest.raises(ValueError, match="last processor"):
+        _fold(one, ProcessorDown(0))
+
+
+def test_fold_processor_up_appends_tail():
+    p = _problem()
+    p2 = _fold(p, ProcessorUp(w=1.7, z=0.4, latency=0.02, tau=1.0))
+    assert p2.w == p.w + (1.7,)
+    assert p2.z == p.z + (0.4,)
+    assert p2.latency == p.latency + (0.02,)
+    assert p2.tau == p.tau + (1.0,)
+
+
+def test_fold_unknown_event_raises():
+    with pytest.raises(TypeError, match="unknown replan event"):
+        _fold(_problem(), object())
+
+
+# ---------------- the replanner ----------------
+
+
+def test_replanner_warm_provenance_and_basis_carry():
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem())
+    assert rp.artifact is not None and rp._basis is not None
+    art = rp.apply(SpeedObserved(1, 1.9))
+    ev = art.events[-1]
+    assert ev["kind"] == "replan" and ev["trigger"] == "SpeedObserved"
+    assert ev["warm_requested"] and ev["warm"]
+    assert ev["pivots_phase1"] == 0  # the whole point: phase 1 skipped
+    # structural event: cold, and the basis is rebuilt from the new solve
+    art2 = rp.apply(ProcessorUp(w=1.3, z=0.2))
+    ev2 = art2.events[-1]
+    assert not ev2["warm_requested"] and not ev2["warm"]
+    assert rp._basis is not None and len(rp._basis) != len(ev) - 1
+
+
+def test_replanner_warm_false_never_seeds():
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem(), warm=False)
+    art = rp.apply(SpeedObserved(0, 1.2))
+    assert not art.events[-1]["warm_requested"]
+    assert art.ok
+
+
+def test_replanner_deadline_recorded():
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem())
+    met = rp.apply(LoadArrived(v_comm=0.1, v_comp=0.1, deadline=1e9))
+    assert met.events[-1]["deadline_met"] is True
+    missed = rp.apply(LoadArrived(v_comm=0.1, v_comp=0.1, deadline=1e-9))
+    assert missed.events[-1]["deadline_met"] is False
+    assert missed.ok  # a missed deadline is provenance, not a failure
+
+
+def test_replanner_cache_hit_keeps_basis():
+    # a cache-hit replan carries no final_basis in its telemetry; the
+    # replanner must keep the held basis (the coefficients are quantized-
+    # identical), so the NEXT coefficient event still warm-starts
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem())
+    basis0 = rp._basis
+    rp.apply(SpeedObserved(1, 1.9))
+    basis1 = rp._basis
+    rp.apply(SpeedObserved(1, float(_problem().w[1])))  # back to the start
+    rp.apply(SpeedObserved(1, 1.9))  # quantized-identical to the 2nd state
+    hit = rp.artifact
+    assert hit.cache_hit
+    assert rp._basis == basis1  # kept, not dropped
+    after = rp.apply(SpeedObserved(1, 1.88))
+    assert after.events[-1]["warm_requested"]
+    assert basis0 is not None
+
+
+def test_replanner_serializes_through_artifacts():
+    # the replanner owns no solver state: rebuild from the last artifact's
+    # problem + basis and the stream continues warm
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem())
+    art = rp.apply(SpeedObserved(1, 1.9))
+    doc = art.to_json()
+    from repro.api import PlanArtifact
+
+    revived = PlanArtifact.from_json(doc)
+    rp2 = EventStreamReplanner(sess, revived.problem, solve_initial=False)
+    rp2.artifact = revived
+    rp2._basis = EventStreamReplanner._extract_basis(revived)
+    assert rp2._basis == rp._basis
+    a = rp2.apply(SpeedObserved(1, 1.7))
+    assert a.events[-1]["warm_requested"] and a.ok
+
+
+def test_chain_replanner_stream_bridge():
+    from repro.core.planner import BatchSpec, LinkSpec, Planner, StageSpec
+    from repro.runtime.dlt_runner import ChainReplanner
+
+    stages = [StageSpec("s0", flops_per_sec=1e9),
+              StageSpec("s1", flops_per_sec=2e9),
+              StageSpec("s2", flops_per_sec=1.5e9)]
+    links = [LinkSpec(bytes_per_sec=1e9), LinkSpec(bytes_per_sec=2e9)]
+    cr = ChainReplanner(Planner(stages, links), q=2)
+    batches = [BatchSpec(num_samples=64, bytes_per_sample=1e6,
+                         flops_per_sample=1e7)]
+    rp = cr.stream(batches)
+    assert isinstance(rp, EventStreamReplanner)
+    assert rp.session is cr.session  # shares cache + backend handles
+    art = rp.apply(SpeedObserved(1, rp.problem.w[1] * 1.2))
+    assert art.ok and art.events[-1]["kind"] == "replan"
+    rp.close()
+
+
+# ---------------- subscriptions ----------------
+
+
+def test_subscribe_seeds_and_long_polls():
+    sess = Session(Policy(installments=2, backend="batched"))
+    sub = sess.subscribe(_problem())
+    first = sub.next(timeout=1)
+    assert first is not None and first.ok
+    assert sub.latest() is first
+    # empty queue times out without blocking forever
+    assert sub.next(timeout=0.01) is None
+    # publish wakes a blocked consumer
+    got = []
+
+    def consumer():
+        got.append(sub.next(timeout=5))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    updated = dataclasses.replace(first, makespan=first.makespan + 1)
+    sub.publish(updated)
+    t.join(timeout=5)
+    assert not t.is_alive() and got == [updated]
+    assert sub.latest() is updated
+
+
+def test_subscription_close_drains_then_none():
+    sess = Session(Policy(installments=2, backend="batched"))
+    sub = sess.subscribe(_problem())
+    art = sub.latest()
+    sub.publish(art)
+    sub.close()
+    assert sub.closed
+    # queued updates stay readable after close, then None
+    assert sub.next(timeout=1) is not None
+    assert sub.next(timeout=1) is not None
+    assert sub.next(timeout=1) is None
+    sub.publish(art)  # post-close publish is a no-op, not an error
+    assert sub.next(timeout=0.01) is None
+
+
+def test_subscription_bounded_queue_drops_oldest():
+    sess = Session(Policy(installments=2, backend="batched"))
+    sub = PlanSubscription(sess, _problem(), sess.policy, max_queue=2)
+    a = sess.solve(_problem(), Policy(installments=2, backend="batched"))
+    for k in range(4):
+        sub.publish(dataclasses.replace(a, makespan=float(k)))
+    assert sub.next(timeout=1).makespan == 2.0  # 0 and 1 were dropped
+    assert sub.next(timeout=1).makespan == 3.0
+    assert sub.latest().makespan == 3.0
+
+
+def test_replanner_publishes_every_apply_in_order():
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem())
+    arts = rp.replay([SpeedObserved(1, 1.9), SpeedObserved(0, 1.1)])
+    sub = rp.subscription
+    seen = [sub.next(timeout=1) for _ in range(3)]  # initial + 2 replans
+    # FIFO: initial plan first, then strict apply order
+    assert seen[0].events == () or seen[0].events[-1].get("kind") != "replan"
+    assert seen[1].events[-1]["trigger"] == "SpeedObserved"
+    assert seen[1].makespan == arts[0].makespan
+    assert seen[2].makespan == arts[1].makespan
+    # the handle tracks the evolved problem state
+    assert sub.problem == rp.problem
+
+
+# ---------------- concurrency hammers ----------------
+
+
+def test_session_ticket_hammer_8_threads():
+    # >= 8 threads submit through ONE session; no ticket may be lost,
+    # duplicated, or left unresolved, and every artifact must belong to the
+    # problem its thread submitted (seq -> makespan is injective per shape)
+    sess = Session(Policy(installments=1, backend="batched"), max_batch=16)
+    n_threads, per_thread = 8, 12
+    tickets: list = [None] * (n_threads * per_thread)
+    errors: list = []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for k in range(per_thread):
+                # distinct v_comp per (tid, k): the artifact is attributable
+                p = Problem(w=[1.0, 2.0], z=[0.1],
+                            v_comm=[1.0], v_comp=[1.0 + tid + 0.01 * k])
+                tickets[tid * per_thread + k] = (p, sess.submit(p))
+        except BaseException as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert all(entry is not None for entry in tickets)
+    sess.flush()
+    seen = set()
+    for p, tk in tickets:
+        art = tk.result()
+        assert art.ok, art.status
+        assert art.problem == p  # the artifact answers ITS OWN submit
+        assert id(art) not in seen  # no ticket resolved to a shared artifact
+        seen.add(id(art))
+    # bookkeeping: every submit counted exactly once, queue fully drained
+    assert sess._seq == n_threads * per_thread
+    assert not sess._pending and sess._unreported_submits == 0
+
+
+def test_cache_counter_hammer_8_threads():
+    # >= 8 threads hit ONE SolutionCache: hit+miss totals must equal the
+    # number of lookups exactly and the LRU must never lose entries to a
+    # racing touch (del+reinsert)
+    from repro.engine.cache import CachedSolution, SolutionCache
+
+    cache = SolutionCache(max_entries=64)
+    n_threads, per_thread, n_keys = 8, 400, 96
+    g = np.zeros((2, 2))
+    barrier = threading.Barrier(n_threads)
+    errors: list = []
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            rng = np.random.default_rng(tid)
+            for k in range(per_thread):
+                key = f"k{rng.integers(n_keys)}"
+                sol = cache.get(key)
+                if sol is None:
+                    cache.put(key, CachedSolution(gamma=g, lp_makespan=1.0,
+                                                  backend="batched"))
+                if k % 50 == 0:
+                    cache.lookup_many([f"k{j}" for j in range(4)])
+                    cache.stats()
+        except BaseException as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    lookups = n_threads * (per_thread + (per_thread // 50) * 4)
+    assert cache.hits + cache.misses == lookups
+    assert len(cache) <= cache.max_entries
+    # eviction counter consistency: inserts == still-stored + evicted
+    assert cache.misses >= cache.evictions
+    s = cache.stats()
+    assert s["hits"] == cache.hits and s["misses"] == cache.misses
+
+
+def test_session_concurrent_solve_and_submit():
+    # solve_bulk racing submit/flush on one session must neither deadlock
+    # nor cross wires between the sync and async paths
+    sess = Session(Policy(installments=1, backend="batched"), max_batch=4)
+    errors: list = []
+    done = threading.Event()
+
+    def submitter():
+        try:
+            for k in range(24):
+                p = Problem(w=[1.0, 1.5], z=[0.2], v_comm=[1.0],
+                            v_comp=[2.0 + 0.1 * k])
+                sess.submit(p).result()
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    while not done.is_set():
+        arts = sess.solve_bulk([
+            Problem(w=[1.0, 2.0], z=[0.1], v_comm=[1.0], v_comp=[3.0])])
+        assert arts[0].ok
+    t.join(timeout=120)
+    assert not errors, errors
+    assert not sess._pending
+
+
+# ---------------- PerturbedView (lpir coefficient overlays) ----------------
+
+
+def test_perturbed_view_structure_preserved_coefficients_override():
+    from repro.core.instance import Chain, Instance, Loads
+    from repro.lpir import (InstanceView, PerturbedView, emit_schedule_ir,
+                            lower_dense)
+
+    inst = Instance(
+        Chain(w=[1.0, 2.0, 1.5], z=[0.1, 0.2], tau=[0.0, 0.1, 0.0],
+              latency=[0.05, 0.02]),
+        Loads(v_comm=[1.0, 2.0], v_comp=[3.0, 4.0], release=[0.0, 0.5],
+              return_ratio=[0.0, 0.0]),
+        q=2,
+    )
+    base = InstanceView(inst)
+    pert = PerturbedView(base, w={(1, 0): 5.0}, z={0: 0.9}, tau={2: 2.0},
+                         rel={1: 7.0})
+    # structural attributes delegate verbatim
+    for f in ("m", "T", "batch", "load_of_cell", "n_loads", "topology",
+              "has_returns"):
+        assert getattr(pert, f) == getattr(base, f)
+    # named coefficients override, everything else falls through
+    assert pert.w(1, 0) == 5.0 and pert.w(0, 0) == base.w(0, 0)
+    assert pert.z(0) == 0.9 and pert.z(1) == base.z(1)
+    assert pert.tau(2) == 2.0 and pert.tau(0) == base.tau(0)
+    assert pert.rel(1) == 7.0 and pert.rel(0) == base.rel(0)
+    # the basis carry-over invariant: identical row pattern, only numbers move
+    ir_a = emit_schedule_ir(base)
+    ir_b = emit_schedule_ir(pert)
+    assert [r.kind for r in ir_a.ub_rows] == [r.kind for r in ir_b.ub_rows]
+    assert [r.kind for r in ir_a.eq_rows] == [r.kind for r in ir_b.eq_rows]
+    assert ir_a.n_vars == ir_b.n_vars
+    _, Aub_a, _, Aeq_a, _ = lower_dense(ir_a)
+    _, Aub_b, _, Aeq_b, _ = lower_dense(ir_b)
+    assert Aub_a.shape == Aub_b.shape and Aeq_a.shape == Aeq_b.shape
+    assert not np.array_equal(Aub_a, Aub_b)  # the numbers DID move
+    with pytest.raises(ValueError, match="unknown coefficient"):
+        PerturbedView(base, nonsense={0: 1.0})

@@ -333,3 +333,145 @@ if HAVE_HYPOTHESIS:
                                             with_release, with_latency, seed):
         _classifier_never_anomalous(shape_idx, topology, with_returns,
                                     with_release, with_latency, seed)
+
+
+# ------------------------------------------ mis-convergence golden corpus
+
+
+def test_false_optimal_golden_all_backends():
+    # the PR-8 campaign's mis-convergence instance: the dense simplex used
+    # to exit "optimal" with a port-serialization row violated by ~0.24 and
+    # an objective *below* the true optimum (976.1527780792386, HiGHS).
+    # Every backend — including the batched/pallas drivers, whose exits now
+    # run the same primal-feasibility demotion — must land on the golden.
+    from repro.eval import CampaignSpec, full_spec
+
+    spec = full_spec()
+    cell_id = "star/ret0.75/rel0/m2/n3/q4/het1/cc0.02"
+    cell = next(c for c in spec.cells() if CampaignSpec.cell_id(c) == cell_id)
+    inst = spec.materialize(cell, 0)
+    golden = 976.1527780792386
+    for backend in ("simplex", "auto", "batched", "pallas"):
+        rep = get_backend(backend).solve(SolveRequest(instance=inst))
+        assert rep.status == "optimal", (backend, rep.status)
+        assert abs(rep.makespan - golden) <= 1e-6 * golden, (
+            backend, rep.makespan)
+
+
+def test_primal_violation_demotes_optimal_exit():
+    # unit pin on the engine-side check: forge an "optimal" status over an
+    # x that violates A_ub x <= b_ub and assert the demotion to status 5
+    # (false_optimal) — the code the golden above routes through
+    from repro.engine.batched_simplex import _demote_false_optimal
+
+    x = np.array([[2.0, 0.0], [0.5, 0.5]])
+    A_ub = np.tile(np.array([[[1.0, 1.0]]]), (2, 1, 1))
+    b_ub = np.array([[1.0], [1.0]])  # row 0 violated by 1.0, row 1 tight
+    A_eq = np.zeros((2, 0, 2))
+    b_eq = np.zeros((2, 0))
+    status = np.zeros(2, dtype=np.int32)
+    out = _demote_false_optimal(x, status, A_ub, b_ub, A_eq, b_eq)
+    assert out.tolist() == [5, 0]
+    assert STATUS[5] == "false_optimal"
+    # NaN lanes (infeasible/degenerate exits) must pass through untouched
+    xn = np.array([[np.nan, np.nan]])
+    sn = np.array([1], dtype=np.int32)
+    out2 = _demote_false_optimal(xn, sn, A_ub[:1], b_ub[:1], A_eq[:1], b_eq[:1])
+    assert out2.tolist() == [1]
+
+
+# ------------------------------------------ event-stream equivalence arm
+
+
+def _event_stream_case(topology, with_returns, warm, backend):
+    """A replayed event log must end at the same schedule (<= 1e-9 relative
+    makespan) as a cold solve of the final platform state, on a fresh
+    session (no shared cache to trivialize the comparison)."""
+    from repro.api import Policy, Problem, Session
+    from repro.runtime.replan import (EventStreamReplanner, LoadArrived,
+                                      ProcessorDown, ProcessorUp,
+                                      SpeedObserved)
+
+    rng = np.random.default_rng(hash((topology, with_returns, warm)) % 2**31)
+    inst = random_platform_instance(
+        rng, 3, 2, 2, with_latency=True, with_release=True, with_tau=False,
+        topology=topology, with_returns=with_returns)
+    prob = Problem.from_instance(inst)
+    sess = Session(Policy(installments=2, backend=backend))
+    rp = EventStreamReplanner(sess, prob, warm=warm)
+    events = [
+        SpeedObserved(1, float(prob.w[1]) * 1.15),
+        SpeedObserved(2, float(prob.w[2]) * 0.9),
+        LoadArrived(v_comm=0.8, v_comp=1.5, release=0.25,
+                    return_ratio=0.5 if with_returns else 0.0, deadline=1e6),
+        SpeedObserved(0, float(prob.w[0]) * 1.05),
+        ProcessorDown(1, restore_delay=0.1),
+        ProcessorUp(w=1.1, z=0.3, latency=0.05, tau=0.2),
+        SpeedObserved(1, 0.95),
+    ]
+    arts = rp.replay(events)
+    assert all(a.ok for a in arts), [a.status for a in arts]
+    # provenance: every replan is recorded; coefficient events after a basis
+    # exists requested warm iff the replanner runs warm
+    for a, ev in zip(arts, events):
+        tail = a.events[-1]
+        assert tail["kind"] == "replan"
+        assert tail["trigger"] == type(ev).__name__
+        if not isinstance(ev, SpeedObserved):
+            assert not tail["warm_requested"]  # structural => cold, always
+    if warm:
+        assert any(a.events[-1]["warm"] for a in arts), \
+            "warm path never engaged on coefficient events"
+    # the equivalence: final replayed state == cold solve on a FRESH session
+    cold = Session(Policy(installments=2, backend=backend)).solve(rp.problem)
+    assert cold.ok
+    scale = max(abs(cold.makespan), 1.0)
+    assert abs(arts[-1].makespan - cold.makespan) <= RTOL * scale, (
+        arts[-1].makespan, cold.makespan)
+    assert abs(arts[-1].lp_makespan - cold.lp_makespan) <= RTOL * scale
+
+
+@pytest.mark.parametrize("backend", ["batched", "pallas"])
+@pytest.mark.parametrize("warm", [True, False])
+@pytest.mark.parametrize("topology,with_returns",
+                         [("chain", False), ("chain", True),
+                          ("star", False), ("star", True)])
+def test_event_stream_equivalence(topology, with_returns, warm, backend):
+    _event_stream_case(topology, with_returns, warm, backend)
+
+
+def test_warm_start_simplex_matches_cold_on_perturbation():
+    # at the solver layer: warm-started solves of perturbed LPs must land on
+    # the same objective as cold solves, with zero phase-1 pivots whenever
+    # the carried basis is accepted
+    rng = np.random.default_rng(5)
+    insts = [random_platform_instance(rng, 4, 2, 2, True, True, False,
+                                      topology="star", with_returns=True)
+             for _ in range(3)]
+    from repro.engine.batched_lp import build_lp_bucket
+    from repro.engine.arena import pack_instances
+
+    (bucket,) = pack_instances(insts)
+    lp = build_lp_bucket(bucket)
+    c = np.tile(lp.c, (bucket.B, 1))
+    base = solve_simplex_batched(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    assert (base.status == 0).all()
+    assert base.basis is not None and not base.warm_started.any()
+    # perturb the objective/rows mildly (a speed drift) and re-solve warm
+    A_ub2 = lp.A_ub * (1 + 1e-3)
+    warm = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq,
+                                 warm_basis=base.basis)
+    cold = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq)
+    np.testing.assert_array_equal(warm.status, cold.status)
+    np.testing.assert_allclose(warm.objective, cold.objective,
+                               rtol=1e-9, atol=1e-12)
+    accepted = warm.warm_started
+    assert accepted.any(), "no lane accepted the carried basis"
+    assert (warm.iterations_phase1[accepted] == 0).all()
+    # a rejected/garbage seed must fall back to a cold solve transparently
+    bad = np.full_like(base.basis, 10**6)
+    fb = solve_simplex_batched(c, A_ub2, lp.b_ub, lp.A_eq, lp.b_eq,
+                               warm_basis=bad)
+    assert not fb.warm_started.any()
+    np.testing.assert_allclose(fb.objective, cold.objective,
+                               rtol=1e-12, atol=0)
