@@ -122,6 +122,18 @@ def bench_metrics(benches: dict) -> dict:
             elif rec["metric"] == "replan_event_per_sec":
                 reg.set_gauge("repro_bench_replan_events_per_sec",
                               float(rec["value"]), path=rec["label"])
+    b = benches.get("serve")
+    if b:
+        # only the warm-restart rows are gated; the shard throughput rows
+        # stay CSV-only (a 1-device "scaling" ratio is contention noise)
+        for row in b["rows"]:
+            rec = dict(zip(b["header"], row))
+            if rec["metric"] == "serve_inst_per_sec":
+                reg.set_gauge("repro_bench_serve_inst_per_sec",
+                              float(rec["value"]), path=rec["label"])
+            elif rec["metric"] == "serve_warm_restart_ratio":
+                reg.set_gauge("repro_bench_serve_warm_restart_ratio",
+                              float(rec["value"]), layer=rec["label"])
     return reg.snapshot()
 
 
@@ -207,12 +219,13 @@ def main(argv=None) -> int:
         return 0
     quick = not args.full
     if args.smoke and not args.only:
-        args.only = "engine_throughput,star,kernels,session,hotpath,replan"
+        args.only = "engine_throughput,star,kernels,session,hotpath,replan,serve"
 
     from . import (bench_campaign, bench_engine_throughput, bench_hotpath,
                    bench_kernels, bench_latency_qstar, bench_lp_scaling,
-                   bench_motivating_example, bench_replan, bench_session,
-                   bench_star, bench_table2, bench_theorem1, roofline)
+                   bench_motivating_example, bench_replan, bench_serve,
+                   bench_session, bench_star, bench_table2, bench_theorem1,
+                   roofline)
 
     benches = {
         "motivating_example": bench_motivating_example.main,
@@ -226,6 +239,7 @@ def main(argv=None) -> int:
         "session": bench_session.main,
         "hotpath": bench_hotpath.main,
         "replan": bench_replan.main,
+        "serve": bench_serve.main,
         # not in the --smoke only-list: CI gives the campaign its own
         # dedicated step (python -m repro.eval --smoke + check_campaign.py)
         "campaign": bench_campaign.main,

@@ -4,8 +4,13 @@
 Validates the summary against its schema (benchmarks.run.validate_summary),
 then compares every tier-1 metric in benchmarks/baseline.json against the
 summary's metrics section: a metric that dropped more than ``--threshold``
-(default 20%) below its baseline fails the gate.  Metrics missing from the
-summary fail too — a silently-skipped bench must not read as a pass.
+(default 20%) below its baseline fails the gate.  Missing rows fail HARD in
+both directions — a baseline row absent from the summary means a bench was
+silently skipped, and a ``repro_bench_*`` summary row absent from the
+baseline means a new bench is running ungated (its numbers could halve and
+nobody would notice).  ``--allow-missing PATTERN`` (repeatable, fnmatch
+globs) is the explicit escape hatch for intentionally-new rows that have no
+baseline yet; use it for exactly one CI run, then commit the baseline.
 
 CI runs this twice (DESIGN.md §8): **blocking** against a summary rebuilt
 from the committed bench_out CSVs (the full-scale numbers of record, via
@@ -20,6 +25,7 @@ the same verdict the blocking gate gives.
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import sys
@@ -28,17 +34,31 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, REPO)  # benchmarks package
 sys.path.insert(0, os.path.join(REPO, "src"))
 
+# summary metrics under this prefix are bench rows the gate owns: every one
+# must have a baseline row (or an explicit --allow-missing pattern)
+_GATED_PREFIX = "repro_bench_"
 
-def check(summary: dict, baseline: dict, threshold: float) -> tuple:
+
+def _allowed(name: str, allow_missing) -> bool:
+    return any(fnmatch.fnmatch(name, pat) for pat in (allow_missing or ()))
+
+
+def check(summary: dict, baseline: dict, threshold: float,
+          allow_missing=()) -> tuple:
     """Returns (problems, report_lines) — problems empty means the gate holds."""
     from benchmarks.run import validate_summary
 
     problems = list(validate_summary(summary))
     report = []
     got = summary.get("metrics") or {}
-    for name, base in sorted((baseline.get("metrics") or {}).items()):
+    base_metrics = baseline.get("metrics") or {}
+    for name, base in sorted(base_metrics.items()):
         if name not in got:
-            problems.append(f"missing from summary: {name}")
+            if _allowed(name, allow_missing):
+                report.append(f"  ok  {name}: missing from summary "
+                              f"(--allow-missing)")
+            else:
+                problems.append(f"missing from summary: {name}")
             continue
         val = float(got[name])
         floor = base * (1.0 - threshold)
@@ -48,6 +68,19 @@ def check(summary: dict, baseline: dict, threshold: float) -> tuple:
             problems.append(f"regression: {line}, floor {floor:.1f}")
         else:
             report.append(f"  ok  {line}")
+    # the reverse direction: a bench row with no baseline runs ungated —
+    # hard-fail so new benches land WITH their floor (escape hatch:
+    # --allow-missing for the one run that establishes the number)
+    for name in sorted(got):
+        if not name.startswith(_GATED_PREFIX) or name in base_metrics:
+            continue
+        if _allowed(name, allow_missing):
+            report.append(f"  ok  {name}: no baseline row (--allow-missing)")
+        else:
+            problems.append(
+                f"ungated bench row: {name} is in the summary but has no "
+                f"baseline (add it to benchmarks/baseline.json or pass "
+                f"--allow-missing '{name}')")
     return problems, report
 
 
@@ -59,6 +92,11 @@ def main(argv=None) -> int:
                     help="max allowed fractional drop vs baseline (default 0.20)")
     ap.add_argument("--warn-only", action="store_true",
                     help="print problems but exit 0 (the current CI mode)")
+    ap.add_argument("--allow-missing", action="append", default=[],
+                    metavar="PATTERN",
+                    help="fnmatch pattern of metric rows allowed to be "
+                         "missing (either direction); repeatable — the "
+                         "explicit escape hatch for a new row's first run")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.summary):
@@ -70,7 +108,8 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    problems, report = check(summary, baseline, args.threshold)
+    problems, report = check(summary, baseline, args.threshold,
+                             allow_missing=args.allow_missing)
     for line in report:
         print(line)
     if problems:

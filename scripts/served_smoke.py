@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Served smoke: the planning-service acceptance gate (DESIGN.md §12).
+
+Starts a real `PlanServer` (HTTP on an ephemeral port, sqlite store in a
+temp dir), submits a mixed population through `PlanClient`, and checks:
+
+  1. every served artifact is `diff()`-clean against a direct
+     `Session.solve` of the same (problem, policy) — the wire format and
+     the worker path lose nothing;
+  2. `/healthz` reports ok with the configured worker count and `/metrics`
+     exposes the serve counters in Prometheus text;
+  3. repeated requests are cache hits (workers share one tiered cache) and
+     a RESTARTED server over the same store file serves store hits — the
+     cross-process warm-restart path;
+  4. `close()` drains: the admitted backlog resolves, new submits are
+     rejected with `ServerClosed`, and healthz flips to "draining".
+
+Exits non-zero on any violation; prints a one-line summary per check.
+
+  PYTHONPATH=src python scripts/served_smoke.py [--n 12] [--workers 2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def make_problems(n: int):
+    import numpy as np
+
+    from repro.api import Problem
+
+    rng = np.random.default_rng(7)
+    probs = []
+    for k in range(n):
+        m = 2 + (k % 2)
+        probs.append(Problem(
+            w=rng.uniform(1.0, 3.0, m).tolist(),
+            z=rng.uniform(0.05, 0.3, m - 1).tolist(),
+            v_comm=rng.uniform(0.5, 1.5, 2).tolist(),
+            v_comp=rng.uniform(0.5, 1.5, 2).tolist(),
+        ))
+    return probs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    from repro.api import Policy, Session
+    from repro.serve import PlanClient, PlanServer, ServerClosed
+
+    policy = Policy(installments=2, backend="batched")
+    problems = make_problems(args.n)
+    store = os.path.join(tempfile.mkdtemp(prefix="served_smoke_"),
+                         "plans.sqlite")
+    direct = Session(policy)
+
+    server = PlanServer(store=store, workers=args.workers, policy=policy,
+                        port=0)
+    try:
+        client = PlanClient(f"http://localhost:{server.port}")
+
+        h = client.healthz()
+        assert h["status"] == "ok" and h["workers"] == args.workers, h
+        print(f"ok  healthz: {h['status']}, {h['workers']} workers, "
+              f"queue {h['queue_depth']}/{h['queue_limit']}")
+
+        served = [client.plan(p) for p in problems]
+        assert all(a.ok for a in served), [a.status for a in served]
+        for a, p in zip(served, problems):
+            ref = direct.solve(p)
+            d = a.diff(ref)
+            assert d == {}, f"served artifact diverged from direct solve: {d}"
+        print(f"ok  parity: {len(served)} served artifacts diff()-clean "
+              f"vs direct Session.solve")
+
+        again = [client.plan(p) for p in problems]
+        assert all(a.cache_hit for a in again), "repeat must hit the shared cache"
+        assert all(a.diff(b) == {} for a, b in zip(again, served))
+        print(f"ok  shared cache: {len(again)} repeats all cache hits")
+
+        text = client.metrics_text()
+        for needle in ("repro_serve_requests_total",
+                       "repro_serve_admitted_total"):
+            assert needle in text, f"{needle} missing from /metrics"
+        print(f"ok  metrics: serve counters exposed "
+              f"({len(text.splitlines())} lines)")
+    finally:
+        server.close()
+
+    assert server.healthz()["status"] == "draining"
+    try:
+        server.plan(problems[0])
+    except ServerClosed:
+        print("ok  drain: post-close submits rejected, healthz draining")
+    else:
+        raise AssertionError("post-close submit must raise ServerClosed")
+
+    restarted = PlanServer(store=store, workers=1, policy=policy)
+    try:
+        warm = [restarted.plan(p) for p in problems]
+        assert all(a.cache_hit for a in warm), "restart must serve store hits"
+        assert restarted.cache.store_hits == len(problems), \
+            restarted.cache.store_hits
+        for a, b in zip(warm, served):
+            assert a.diff(b) == {}, "store-hit artifact diverged"
+        print(f"ok  warm restart: {restarted.cache.store_hits} store hits, "
+              f"all diff()-clean vs the first process")
+    finally:
+        restarted.close()
+
+    print("served smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,9 +39,94 @@ import numpy as np
 
 from .spec import Policy, Problem
 
-__all__ = ["ARTIFACT_VERSION", "PlanArtifact"]
+__all__ = [
+    "ARTIFACT_VERSION",
+    "PlanArtifact",
+    "problem_to_dict",
+    "problem_from_dict",
+    "policy_to_dict",
+    "policy_from_dict",
+]
 
 ARTIFACT_VERSION = 2
+
+
+def problem_to_dict(p: Problem) -> dict:
+    """The canonical JSON-safe encoding of a :class:`Problem`.
+
+    The exact field set artifacts serialize (and the serve wire format
+    submits) — extracted so every encoder of a Problem agrees bit-for-bit.
+    """
+    return {
+        "topology": p.topology,
+        "w": list(p.w),
+        "z": list(p.z),
+        "tau": list(p.tau),
+        "latency": list(p.latency),
+        "v_comm": list(p.v_comm),
+        "v_comp": list(p.v_comp),
+        "release": list(p.release),
+        "return_ratio": list(p.return_ratio),
+        "w_per_load": [list(r) for r in p.w_per_load]
+        if p.w_per_load is not None
+        else None,
+    }
+
+
+def problem_from_dict(d: dict) -> Problem:
+    """Inverse of :func:`problem_to_dict`."""
+    return Problem(
+        w=d["w"],
+        z=d["z"],
+        v_comm=d["v_comm"],
+        v_comp=d["v_comp"],
+        topology=d["topology"],
+        tau=d["tau"],
+        latency=d["latency"],
+        release=d["release"],
+        return_ratio=d["return_ratio"],
+        w_per_load=d["w_per_load"],
+    )
+
+
+def policy_to_dict(pl: Policy) -> dict:
+    """The canonical JSON-safe encoding of a :class:`Policy`."""
+    return {
+        "installments": list(pl.installments),
+        "auto_t": pl.auto_t,
+        "t_max": pl.t_max,
+        "t_candidates": list(pl.t_candidates)
+        if pl.t_candidates is not None
+        else None,
+        "installment_cost": pl.installment_cost,
+        "backend": pl.backend,
+        "objective": pl.objective,
+        "weights": list(pl.weights) if pl.weights is not None else None,
+        "beta": pl.beta,
+        "cross_check": pl.cross_check,
+        "validate": pl.validate,
+        "fallback": pl.fallback,
+        "cache_quantum": pl.cache_quantum,
+    }
+
+
+def policy_from_dict(d: dict) -> Policy:
+    """Inverse of :func:`policy_to_dict`."""
+    return Policy(
+        installments=d["installments"],
+        auto_t=d["auto_t"],
+        t_max=d["t_max"],
+        t_candidates=d["t_candidates"],
+        installment_cost=d["installment_cost"],
+        backend=d["backend"],
+        objective=d["objective"],
+        weights=d["weights"],
+        beta=d["beta"],
+        cross_check=d["cross_check"],
+        validate=d["validate"],
+        fallback=d["fallback"],
+        cache_quantum=d["cache_quantum"],
+    )
 
 
 @dataclasses.dataclass
@@ -167,42 +252,10 @@ class PlanArtifact:
     # ---------------- serialization ----------------
 
     def to_dict(self) -> dict:
-        p = self.problem
         out = {
             "version": self.version,
-            "problem": {
-                "topology": p.topology,
-                "w": list(p.w),
-                "z": list(p.z),
-                "tau": list(p.tau),
-                "latency": list(p.latency),
-                "v_comm": list(p.v_comm),
-                "v_comp": list(p.v_comp),
-                "release": list(p.release),
-                "return_ratio": list(p.return_ratio),
-                "w_per_load": [list(r) for r in p.w_per_load]
-                if p.w_per_load is not None
-                else None,
-            },
-            "policy": {
-                "installments": list(self.policy.installments),
-                "auto_t": self.policy.auto_t,
-                "t_max": self.policy.t_max,
-                "t_candidates": list(self.policy.t_candidates)
-                if self.policy.t_candidates is not None
-                else None,
-                "installment_cost": self.policy.installment_cost,
-                "backend": self.policy.backend,
-                "objective": self.policy.objective,
-                "weights": list(self.policy.weights)
-                if self.policy.weights is not None
-                else None,
-                "beta": self.policy.beta,
-                "cross_check": self.policy.cross_check,
-                "validate": self.policy.validate,
-                "fallback": self.policy.fallback,
-                "cache_quantum": self.policy.cache_quantum,
-            },
+            "problem": problem_to_dict(self.problem),
+            "policy": policy_to_dict(self.policy),
             "q": list(self.q),
             "gamma": [[float(v) for v in row] for row in np.asarray(self.gamma)],
             "makespan": float(self.makespan),
@@ -236,35 +289,8 @@ class PlanArtifact:
                 f"unknown PlanArtifact version {version!r} "
                 f"(this build reads versions 1..{ARTIFACT_VERSION})"
             )
-        pd = d["problem"]
-        problem = Problem(
-            w=pd["w"],
-            z=pd["z"],
-            v_comm=pd["v_comm"],
-            v_comp=pd["v_comp"],
-            topology=pd["topology"],
-            tau=pd["tau"],
-            latency=pd["latency"],
-            release=pd["release"],
-            return_ratio=pd["return_ratio"],
-            w_per_load=pd["w_per_load"],
-        )
-        pl = d["policy"]
-        policy = Policy(
-            installments=pl["installments"],
-            auto_t=pl["auto_t"],
-            t_max=pl["t_max"],
-            t_candidates=pl["t_candidates"],
-            installment_cost=pl["installment_cost"],
-            backend=pl["backend"],
-            objective=pl["objective"],
-            weights=pl["weights"],
-            beta=pl["beta"],
-            cross_check=pl["cross_check"],
-            validate=pl["validate"],
-            fallback=pl["fallback"],
-            cache_quantum=pl["cache_quantum"],
-        )
+        problem = problem_from_dict(d["problem"])
+        policy = policy_from_dict(d["policy"])
         return cls(
             problem=problem,
             policy=policy,

@@ -259,12 +259,18 @@ class Session:
         cache=None,
         max_batch: int | None = 64,
         metrics=None,
+        store=None,
     ):
         self.policy = policy if policy is not None else Policy()
         if max_batch is not None and max_batch < 1:
             raise ValueError("max_batch must be >= 1 (or None to disable)")
+        if store is not None and cache is not None:
+            raise ValueError(
+                "pass either cache= or store= (a store builds its own "
+                "TieredSolutionCache); not both")
         self.max_batch = max_batch
         self._cache = cache  # the default-quantum cache (None until needed)
+        self._store = store  # path/PlanStore -> tiered cache on first engine use
         self._extra_caches: dict = {}  # per-call cache_quantum overrides
         self._backends: dict = {}
         self._pending: list[_Pending] = []
@@ -320,11 +326,23 @@ class Session:
 
     @property
     def cache(self):
-        """The session solution cache, created on first engine use."""
-        if self._cache is None:
-            from repro.engine.cache import SolutionCache  # deferred: engine pkg
+        """The session solution cache, created on first engine use.
 
-            self._cache = SolutionCache(quantum=self.policy.cache_quantum)
+        A session constructed with ``store=`` (a path or
+        :class:`repro.serve.PlanStore`) builds a
+        :class:`repro.serve.TieredSolutionCache` over it instead of the
+        plain in-memory LRU, so its plans persist across processes.
+        """
+        if self._cache is None:
+            if self._store is not None:
+                from repro.serve.store import TieredSolutionCache
+
+                self._cache = TieredSolutionCache(
+                    self._store, quantum=self.policy.cache_quantum)
+            else:
+                from repro.engine.cache import SolutionCache  # deferred: engine pkg
+
+                self._cache = SolutionCache(quantum=self.policy.cache_quantum)
         return self._cache
 
     @cache.setter

@@ -131,6 +131,8 @@ def solve_bulk(
     validate: bool = True,
     use_pallas: bool = False,
     warm_starts: list | None = None,
+    devices: list | None = None,
+    n_shards: int | None = None,
 ) -> list:
     """Solve many instances at once; returns ``LPResult``s in caller order.
 
@@ -151,10 +153,23 @@ def solve_bulk(
     solves cold, identically to omitting the argument.  The exit basis of
     every engine-solved instance rides back in
     ``result.telemetry["lp"]["final_basis"]`` for the *next* replan.
+
+    ``devices``/``n_shards`` fan the arena buckets out across local JAX
+    devices (or logical thread shards) via :mod:`repro.serve.shard` —
+    deterministic assignment, parity-locked results; both ``None`` (the
+    default) keeps the single-device path below.
     """
     label = "pallas" if use_pallas else "batched"
     if objective != "makespan":
         return [solve(inst, objective=objective, validate=validate) for inst in instances]
+    if devices is not None or n_shards is not None:
+        from repro.serve.shard import solve_bulk_sharded  # deferred: serve pkg
+
+        return solve_bulk_sharded(
+            instances, objective=objective, cache=cache, fallback=fallback,
+            validate=validate, use_pallas=use_pallas, warm_starts=warm_starts,
+            devices=devices, n_shards=n_shards,
+        )
 
     met = obs_metrics.get_registry()
     met.inc("repro_engine_bulk_solves_total", path=label)
@@ -347,9 +362,13 @@ class BatchedBackend(SolverBackend):
     name = "batched"
     use_pallas = False  # subclass hook: route through the fused Pallas kernels
 
-    def __init__(self, cache: SolutionCache | None = None, fallback: bool = True):
+    def __init__(self, cache: SolutionCache | None = None, fallback: bool = True,
+                 devices: list | None = None, n_shards: int | None = None):
         super().__init__(cache=cache)
         self.fallback = fallback
+        # device-sharded fan-out (repro.serve.shard): both None = single-device
+        self.devices = devices
+        self.n_shards = n_shards
 
     def stats(self) -> dict:
         """Cache stats of this backend's solution cache.
@@ -390,6 +409,8 @@ class BatchedBackend(SolverBackend):
                 validate=validate,
                 use_pallas=self.use_pallas,
                 warm_starts=warm if any(w is not None for w in warm) else None,
+                devices=self.devices,
+                n_shards=self.n_shards,
             )
             for i, res in zip(bulk_idxs, results):
                 reports[i] = SolveReport.from_result(res, requests[i])

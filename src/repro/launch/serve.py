@@ -9,6 +9,14 @@ lowers for the decode_* shape cells.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \\
       --batch 4 --prompt-len 32 --gen-len 16
+
+``--serve`` switches to the long-lived planning service instead (no model
+stack): a :class:`repro.serve.PlanServer` — worker Sessions behind a
+bounded admission queue, an optional persistent plan store shared across
+restarts/replicas, ``/healthz`` + ``/metrics``, graceful drain on SIGINT::
+
+  PYTHONPATH=src python -m repro.launch.serve --serve --serve-port 8080 \\
+      --serve-store /tmp/plans.sqlite --serve-workers 4
 """
 
 from __future__ import annotations
@@ -30,7 +38,9 @@ from repro.launch.mesh import HW
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="model architecture for the decode demo "
+                         "(required unless --serve)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -61,6 +71,28 @@ def main(argv=None):
     ap.add_argument("--installment-cost", type=float, default=1e-3,
                     help="fixed per-installment overhead (seconds) charged "
                          "by the --auto-t sweep")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the long-lived planning service "
+                         "(repro.serve.PlanServer) instead of the decode demo")
+    ap.add_argument("--serve-port", type=int, default=0, metavar="PORT",
+                    help="HTTP port for --serve (0 = ephemeral, printed)")
+    ap.add_argument("--serve-workers", type=int, default=2,
+                    help="worker Sessions behind the admission queue")
+    ap.add_argument("--serve-store", default=None, metavar="PATH",
+                    help="persistent plan store (sqlite file) shared across "
+                         "restarts and sibling replicas; default in-memory")
+    ap.add_argument("--serve-queue-limit", type=int, default=256,
+                    help="bounded admission queue depth (backpressure: a "
+                         "full queue rejects with HTTP 429)")
+    ap.add_argument("--serve-deadline", type=float, default=30.0,
+                    help="default per-request deadline (seconds)")
+    ap.add_argument("--serve-shards", type=int, default=None, metavar="N",
+                    help="fan engine buckets out over N shards per solve "
+                         "(default: single-device)")
+    ap.add_argument("--serve-duration", type=float, default=None,
+                    metavar="SECONDS",
+                    help="with --serve: drain and exit after this long "
+                         "(default: run until SIGINT)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record spans for the whole run (serve + planning) "
@@ -71,6 +103,8 @@ def main(argv=None):
                          "text on http://localhost:PORT/metrics for the "
                          "duration of the run")
     args = ap.parse_args(argv)
+    if not args.serve and args.arch is None:
+        ap.error("--arch is required (unless running --serve)")
 
     # observability surfaces (repro.obs): both are no-cost when unset
     metrics_server = None
@@ -87,7 +121,10 @@ def main(argv=None):
         tracer = Tracer()
         prev_tracer = activate(tracer)
     try:
-        _run(args)
+        if args.serve:
+            _run_server(args)
+        else:
+            _run(args)
     finally:
         if tracer is not None:
             from repro.obs import activate
@@ -97,6 +134,44 @@ def main(argv=None):
             print(f"trace: {args.trace_out} ({len(tracer)} spans)")
         if metrics_server is not None:
             metrics_server.shutdown()
+
+
+def _run_server(args):
+    """The --serve mode: stand up a PlanServer and run until stopped.
+
+    Admitted work always drains before exit (SIGINT and --serve-duration
+    both go through ``PlanServer.close()``), so Ctrl-C never drops a plan.
+    """
+    from repro.serve import PlanServer
+
+    server = PlanServer(
+        store=args.serve_store,
+        workers=args.serve_workers,
+        queue_limit=args.serve_queue_limit,
+        default_deadline_s=args.serve_deadline,
+        n_shards=args.serve_shards,
+        port=args.serve_port,
+    )
+    print(f"plan server: http://localhost:{server.port}/v1/plan "
+          f"({args.serve_workers} workers, queue {args.serve_queue_limit}, "
+          f"store={args.serve_store or 'in-memory'})")
+    print(f"  healthz: http://localhost:{server.port}/healthz   "
+          f"metrics: http://localhost:{server.port}/metrics")
+    try:
+        if args.serve_duration is not None:
+            time.sleep(args.serve_duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        print("draining...")
+    finally:
+        server.close()
+        st = server.cache.stats()
+        print(f"drained. cache: {st.get('hits', 0)} hit / "
+              f"{st.get('misses', 0)} miss"
+              + (f", store: {st['store']['entries']} rows persisted"
+                 if "store" in st else ""))
 
 
 def _run(args):

@@ -38,6 +38,7 @@ state (basis, cache, subscriptions) across solves.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from repro.api import Policy, Problem, Session
 from repro.obs import metrics as obs_metrics
@@ -222,6 +223,20 @@ class EventStreamReplanner:
     (``telemetry["lp"]["final_basis"]``): the replanner owns no solver
     state, so it serializes/restarts trivially — rebuild it from the last
     artifact and keep consuming the stream.
+
+    **Debouncing** (``debounce_window``, seconds): an observation storm —
+    hundreds of :class:`SpeedObserved` ticks from a jittery monitor — would
+    otherwise pay one full re-solve per tick.  With a window, coefficient
+    events *fold immediately* (``self.problem`` always reflects every event
+    seen) but the re-solve is deferred: the first buffered event opens a
+    window, later events within it coalesce, and the solve fires at the
+    first event on-or-after the window edge — one solve per window, however
+    dense the storm (regression-tested).  There is no background thread
+    (the Session deadline convention): a burst that simply *stops* inside
+    its window re-solves at the next :meth:`apply`, :meth:`flush`, or
+    :meth:`close`.  Structural events are never deferred — they flush any
+    buffered folds into their own (cold) solve, so event ordering holds.
+    ``clock`` is injectable for deterministic tests.
     """
 
     def __init__(
@@ -234,7 +249,11 @@ class EventStreamReplanner:
         backend=None,
         subscription=None,
         solve_initial: bool = True,
+        debounce_window: float | None = None,
+        clock=time.monotonic,
     ):
+        if debounce_window is not None and debounce_window <= 0:
+            raise ValueError("debounce_window must be > 0 (or None to disable)")
         self.session = session
         self.policy = policy if policy is not None else session.policy
         self.warm = warm
@@ -243,6 +262,11 @@ class EventStreamReplanner:
         self.artifact = None
         self._basis = None
         self.events: list = []  # the applied log, in order
+        self.debounce_window = debounce_window
+        self._clock = clock
+        self._buffered: list = []  # folded-but-unsolved coefficient events
+        self._window_deadline: float | None = None
+        self.solve_count = 0  # re-solves actually dispatched (storm tests)
         if solve_initial:
             self.artifact = session.solve(problem, self.policy, backend=backend)
             self._basis = self._extract_basis(self.artifact)
@@ -263,11 +287,56 @@ class EventStreamReplanner:
         return (telem.get("lp") or {}).get("final_basis")
 
     def apply(self, event):
-        """Fold one event, re-solve, publish; returns the new artifact."""
-        trigger = type(event).__name__
+        """Fold one event; re-solve now or coalesce it into the open window.
+
+        Returns the newest artifact: the freshly re-solved one, or — when
+        the event was debounced into an open window — the current plan
+        (``self.problem`` is already ahead of it; the solve lands at the
+        window edge).
+        """
         self.problem = _fold(self.problem, event)
+        self.events.append(event)
+        if self.debounce_window is not None and isinstance(
+                event, _COEFFICIENT_EVENTS):
+            self._buffered.append(event)
+            now = self._clock()
+            if self._window_deadline is None:
+                self._window_deadline = now + self.debounce_window
+            if now < self._window_deadline:
+                obs_metrics.get_registry().inc(
+                    "repro_replan_coalesced_total",
+                    trigger=type(event).__name__)
+                return self.artifact
+            return self._solve_buffered()
+        # structural (or undebounced) path: buffered folds ride along in
+        # this solve — one re-solve covers the whole backlog plus the event
+        coalesced, self._buffered = self._buffered, []
+        self._window_deadline = None
+        return self._resolve(event, len(coalesced))
+
+    def flush(self):
+        """Force the deferred re-solve of any buffered events now.
+
+        A no-op (returning the current artifact) when nothing is buffered;
+        call it when a storm went quiet mid-window and the fresher plan is
+        wanted before the next event arrives.
+        """
+        if not self._buffered:
+            return self.artifact
+        return self._solve_buffered()
+
+    def _solve_buffered(self):
+        batch, self._buffered = self._buffered, []
+        self._window_deadline = None
+        return self._resolve(batch[-1], len(batch) - 1)
+
+    def _resolve(self, event, n_coalesced: int):
+        """One actual re-solve, triggered by ``event`` (with ``n_coalesced``
+        earlier events folded into the same LP); publishes the artifact."""
+        trigger = type(event).__name__
         structural = not isinstance(event, _COEFFICIENT_EVENTS)
         seed = None if (structural or not self.warm) else self._basis
+        self.solve_count += 1
         art = self.session.solve(
             self.problem, self.policy, backend=self.backend, warm_basis=seed,
         )
@@ -293,6 +362,9 @@ class EventStreamReplanner:
             "pivots_phase1": lp.get("pivots_phase1"),
             "pivots_phase2": lp.get("pivots_phase2"),
         }
+        if n_coalesced:
+            # debounce provenance: this solve answered a whole burst
+            provenance["coalesced"] = int(n_coalesced)
         if isinstance(event, LoadArrived) and event.deadline is not None:
             provenance["deadline"] = float(event.deadline)
             provenance["deadline_met"] = bool(art.ok and art.makespan <= event.deadline)
@@ -300,7 +372,6 @@ class EventStreamReplanner:
             art = dataclasses.replace(art, events=art.events + (provenance,))
 
         self.artifact = art
-        self.events.append(event)
         met = obs_metrics.get_registry()
         met.inc("repro_replan_events_total", trigger=trigger,
                 warm=str(provenance["warm"]).lower())
@@ -312,4 +383,6 @@ class EventStreamReplanner:
         return [self.apply(ev) for ev in events]
 
     def close(self) -> None:
+        """Flush any buffered (debounced) events, then end the feed."""
+        self.flush()
         self.subscription.close()

@@ -1,0 +1,41 @@
+"""repro.serve — the planning service layer (DESIGN.md §12).
+
+Three layers over the engine/Session stack, each usable alone:
+
+* :mod:`repro.serve.shard` — device-sharded ``solve_bulk`` fan-out:
+  deterministic bucket→device assignment (LPT over ``B*m*T`` with batch
+  splitting), one worker thread per device under ``jax.default_device``,
+  parity-locked to the single-device path.  Reached from the engine as
+  ``solve_bulk(..., devices=...)`` / ``n_shards=...``.
+* :mod:`repro.serve.store` — the persistent cross-process plan store:
+  sqlite-backed, schema-versioned, content-addressed by the existing
+  ``Problem.key()`` hash; corruption quarantines, TTL+LRU eviction.
+  :class:`TieredSolutionCache` layers the in-memory LRU over it and drops
+  into ``Session(cache=...)`` unchanged.
+* :mod:`repro.serve.server` / :mod:`~repro.serve.client` — the long-lived
+  front door: worker Sessions behind a bounded admission queue with
+  deadlines and backpressure, ``/healthz`` + Prometheus ``/metrics``,
+  graceful drain; the stdlib HTTP client mirrors the error contract.
+
+Importing this package is cheap (no jax/engine import until a solve runs).
+"""
+
+from .client import PlanClient, PlanRequestError
+from .server import DeadlineExceeded, PlanServer, ServerBusy, ServerClosed
+from .shard import local_devices, plan_shards, solve_bulk_sharded
+from .store import STORE_SCHEMA_VERSION, PlanStore, TieredSolutionCache
+
+__all__ = [
+    "PlanServer",
+    "PlanClient",
+    "PlanRequestError",
+    "ServerBusy",
+    "ServerClosed",
+    "DeadlineExceeded",
+    "PlanStore",
+    "TieredSolutionCache",
+    "STORE_SCHEMA_VERSION",
+    "plan_shards",
+    "solve_bulk_sharded",
+    "local_devices",
+]

@@ -259,6 +259,103 @@ def test_replanner_publishes_every_apply_in_order():
     assert sub.problem == rp.problem
 
 
+# ---------------- debouncing (observation storms) ----------------
+
+
+def test_debounce_storm_one_solve_per_window():
+    # THE storm regression: a dense burst of SpeedObserved ticks inside one
+    # window must cost at most ONE re-solve (fired at the window edge)
+    clk = [0.0]
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem(), debounce_window=1.0,
+                              clock=lambda: clk[0])
+    stale = rp.artifact
+    for k in range(50):
+        clk[0] += 0.01  # 50 ticks, all inside the 1s window
+        art = rp.apply(SpeedObserved(1, 1.5 + 0.001 * k))
+        assert art is stale  # deferred: the plan on hand is returned
+    assert rp.solve_count == 0
+    # ...but the problem already reflects every tick (folds are immediate)
+    assert rp.problem.w[1] == pytest.approx(1.5 + 0.001 * 49)
+    clk[0] = 2.0  # past the window edge: the next event fires the solve
+    art = rp.apply(SpeedObserved(1, 1.7))
+    assert rp.solve_count == 1
+    ev = art.events[-1]
+    assert ev["kind"] == "replan" and ev["coalesced"] == 50
+    assert art.problem.w[1] == pytest.approx(1.7)
+
+
+def test_debounce_multiple_windows_one_solve_each():
+    clk = [0.0]
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem(), debounce_window=1.0,
+                              clock=lambda: clk[0])
+    for window in range(3):
+        base = float(2 * window)
+        clk[0] = base + 1e-6
+        for k in range(10):  # burst inside the window
+            clk[0] = base + 0.05 * (k + 1)
+            rp.apply(SpeedObserved(1, 1.2 + 0.01 * k))
+        clk[0] = base + 1.5  # edge crossed: this event solves the backlog
+        rp.apply(SpeedObserved(1, 1.4 + 0.1 * window))
+    assert rp.solve_count == 3  # exactly one per window, however dense
+
+
+def test_debounce_flush_solves_backlog_once():
+    clk = [0.0]
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem(), debounce_window=10.0,
+                              clock=lambda: clk[0])
+    for k in range(5):
+        clk[0] += 0.1
+        rp.apply(SpeedObserved(1, 1.5 + 0.01 * k))
+    assert rp.solve_count == 0
+    art = rp.flush()
+    assert rp.solve_count == 1
+    assert art.events[-1]["coalesced"] == 4  # 5 events, 1 trigger + 4 folded
+    assert art is rp.flush()  # empty backlog: flush is a no-op
+    assert rp.solve_count == 1
+
+
+def test_debounce_structural_event_flushes_backlog():
+    # ordering guarantee: a structural event never jumps the buffered folds
+    clk = [0.0]
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem(), debounce_window=10.0,
+                              clock=lambda: clk[0])
+    rp.apply(SpeedObserved(1, 1.5))
+    rp.apply(SpeedObserved(2, 1.6))
+    assert rp.solve_count == 0
+    art = rp.apply(ProcessorUp(w=1.7, z=0.4))
+    assert rp.solve_count == 1  # one cold solve covered folds + structure
+    ev = art.events[-1]
+    assert ev["trigger"] == "ProcessorUp" and ev["coalesced"] == 2
+    assert not ev["warm_requested"]  # structural stays cold
+    assert len(art.problem.w) == 4 and art.problem.w[1] == pytest.approx(1.5)
+
+
+def test_debounce_close_flushes():
+    clk = [0.0]
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem(), debounce_window=10.0,
+                              clock=lambda: clk[0])
+    rp.apply(SpeedObserved(1, 1.9))
+    rp.close()
+    assert rp.solve_count == 1  # nothing buffered is ever silently dropped
+    assert rp.artifact.problem.w[1] == pytest.approx(1.9)
+    assert rp.subscription.closed
+
+
+def test_debounce_disabled_by_default_and_validates():
+    sess = Session(Policy(installments=2, backend="batched"))
+    rp = EventStreamReplanner(sess, _problem())
+    rp.apply(SpeedObserved(1, 1.5))
+    assert rp.solve_count == 1  # no window: every event solves immediately
+    assert "coalesced" not in rp.artifact.events[-1]
+    with pytest.raises(ValueError, match="debounce_window"):
+        EventStreamReplanner(sess, _problem(), debounce_window=0.0)
+
+
 # ---------------- concurrency hammers ----------------
 
 
